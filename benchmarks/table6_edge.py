@@ -1,0 +1,51 @@
+"""Paper Table 6: edge-cluster CIFAR workload — Sync IID (C1), Sync NIID (C2),
+Async NIID (C3). Claims: Sync NIID global ~ centralized; Async trades some
+accuracy for significantly lower wall-clock under heterogeneous silos."""
+from __future__ import annotations
+
+from benchmarks.common import (CNN, N_TEST, N_TRAIN, ROUNDS, acc_summary,
+                               emit, fed, timed)
+from repro.core.builder import SiloSpec, build_image_experiment, global_eval
+from repro.core.orchestrator import SiloPolicy
+
+
+def _edge_specs():
+    """Paper: RPi / Jetson / Docker silos — heterogeneous train AND scoring
+    speeds (scoring = a full test-set evaluation on edge hardware)."""
+    return [SiloSpec(policy=SiloPolicy("top_k", "mean", 2),
+                     extra_train_delay=d, extra_score_delay=d / 2 + 0.2)
+            for d in (1.2, 0.3, 0.0)]
+
+
+def _run(name, mode, partition, alpha=0.5):
+    orch = build_image_experiment(CNN, fed(mode=mode, agg_policy="top_k"),
+                                  partition=partition, alpha=alpha,
+                                  n_train=N_TRAIN, n_test=N_TEST,
+                                  silo_specs=_edge_specs(), seed=2)
+    orch.run(ROUNDS)
+    ge = global_eval(orch)
+    mean_acc, lo, hi = acc_summary(ge)
+    # per-aggregator completion times, as the paper reports them
+    done = [max(m["t"] for m in s.metrics) if s.metrics else 0.0
+            for s in orch.silos]
+    t = sum(done) / len(done)
+    emit(f"table6_{name}_acc", f"{mean_acc:.4f}", f"min={lo:.3f} max={hi:.3f}")
+    emit(f"table6_{name}_simtime", f"{t:.2f}",
+         f"mode={mode} per_agg={[round(d, 2) for d in done]}")
+    return {"acc": mean_acc, "time": t}
+
+
+def main(quick: bool = True) -> dict:
+    out = {}
+    with timed("table6"):
+        out["C1"] = _run("C1_sync_iid", "sync", "iid")
+        out["C2"] = _run("C2_sync_niid", "sync", "niid")
+        out["C3"] = _run("C3_async_niid", "async", "niid")
+        emit("table6_async_time_ratio",
+             f"{out['C2']['time'] / max(out['C3']['time'], 1e-9):.2f}",
+             "paper: ~1.8x (4420s vs 2455s)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

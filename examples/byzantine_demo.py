@@ -1,0 +1,42 @@
+"""Paper Figure 7 demo: a malicious silo vs naive and smart policies.
+
+Silo 2 sign-flips every model it publishes. Under the naive 'all' policy the
+poison enters every aggregate; under 'above_average' the scorers' accuracy
+scores expose it and the policy filters it out.
+
+  PYTHONPATH=src python examples/byzantine_demo.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.config import FedConfig
+from repro.configs import get_config
+from repro.core.builder import SiloSpec, build_image_experiment, global_eval
+from repro.core.orchestrator import SiloPolicy
+
+
+def run(policy_name: str):
+    pol = SiloPolicy(policy_name, "median")
+    specs = [SiloSpec(policy=pol), SiloSpec(policy=pol),
+             SiloSpec(byzantine="signflip")]
+    fed = FedConfig(n_silos=3, clients_per_silo=2, rounds=4, local_epochs=1,
+                    mode="sync", scorer="accuracy")
+    orch = build_image_experiment(get_config("paper-cnn"), fed,
+                                  n_train=1200, n_test=400, alpha=0.5,
+                                  silo_specs=specs, seed=3)
+    orch.run(fed.rounds)
+    ge = global_eval(orch)
+    honest = [ge[s.silo_id]["accuracy"] for s in orch.silos
+              if s.cluster.byzantine is None]
+    return float(np.mean(honest))
+
+
+naive = run("all")
+smart = run("above_average")
+print(f"honest-silo global accuracy, naive 'all' policy:      {naive:.3f}")
+print(f"honest-silo global accuracy, smart 'above_average':   {smart:.3f}")
+print(f"=> smart policy advantage: {smart - naive:+.3f} "
+      "(paper Fig. 7: smart recovers, naive degrades)")

@@ -1,0 +1,13 @@
+"""Batched serving example: prefill + KV-cache greedy decode for any arch.
+
+  PYTHONPATH=src python examples/serve_model.py rwkv6-1.6b
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "gemma-2b"
+main(["--arch", arch, "--preset", "smoke", "--batch", "4",
+      "--prompt-len", "64", "--gen", "24"])

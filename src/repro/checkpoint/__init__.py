@@ -1,0 +1,1 @@
+from repro.checkpoint.checkpoint import Checkpointer, save_state, restore_state  # noqa: F401

@@ -1,0 +1,275 @@
+"""Configuration system for the UnifyFL reproduction framework.
+
+Plain dataclasses (no external deps). Three levels:
+  - ModelConfig: one assigned architecture (exact public-literature numbers).
+  - ShapeConfig: one input-shape cell (train/prefill/decode/long-decode).
+  - MeshConfig / FedConfig / TrainConfig: distribution + federation + optimizer.
+
+``RunConfig`` bundles everything a launcher needs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+# --------------------------------------------------------------------------- #
+# Model
+# --------------------------------------------------------------------------- #
+
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "encdec", "vlm", "cnn")
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 8
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    # 'ep' shards experts over the model axis (all-to-all dispatch);
+    # 'tp' shards each expert's ff dim over the model axis.
+    sharding: str = "ep"
+    aux_loss_coef: float = 0.01
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str  # one of FAMILIES
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None          # default d_model // n_heads
+    # attention flavour
+    attn_window: Optional[int] = None       # SWA / local-attention window
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    logit_softcap: Optional[float] = None
+    rope_theta: float = 10000.0
+    # mlp flavour
+    mlp_act: str = "silu"                   # 'silu' (swiglu) | 'gelu' (geglu)
+    gated_mlp: bool = True
+    # families
+    moe: Optional[MoEConfig] = None
+    block_pattern: Optional[Tuple[str, ...]] = None  # hybrid: e.g. ('rec','rec','attn')
+    n_enc_layers: int = 0                   # encdec only
+    rwkv_head_size: int = 64                # ssm only
+    # embeddings
+    tie_embeddings: bool = True
+    frontend: str = "none"                  # 'none' | 'audio_frames' | 'vq_tokens'
+    frontend_dim: int = 0                   # stub embedding dim for audio/vlm
+    norm_eps: float = 1e-6
+    # numerics
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    # distribution
+    fsdp: bool = False                      # shard params over the data axis too
+    sharding_mode: str = "tp"               # 'tp' (baseline) | 'fsdp' (ZeRO-3,
+    #   params sharded over data+model, batch over data+model, no TP ARs)
+    remat: str = "full"                     # 'none' | 'full' (per scan body)
+    scan_layers: bool = True
+    # provenance
+    source: str = ""
+
+    # ---- derived ---------------------------------------------------------- #
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    def padded_vocab(self, multiple: int = 2048) -> int:
+        return int(math.ceil(self.vocab_size / multiple) * multiple)
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """Can this arch decode with O(1)-or-window state (=> long_500k runs)?"""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        return self.attn_window is not None  # SWA bounds the KV window
+
+    @property
+    def has_decoder(self) -> bool:
+        return self.family != "cnn"  # all assigned LM archs decode
+
+    def n_params(self) -> int:
+        """Analytic parameter count (embedding + blocks), used for 6ND."""
+        hd = self.resolved_head_dim
+        d = self.d_model
+        v = self.vocab_size
+        embed = v * d * (1 if self.tie_embeddings else 2)
+
+        def attn_params() -> int:
+            q = d * self.n_heads * hd
+            kv = 2 * d * self.n_kv_heads * hd
+            o = self.n_heads * hd * d
+            bias = (self.n_heads * hd + 2 * self.n_kv_heads * hd) if self.qkv_bias else 0
+            return q + kv + o + bias
+
+        def mlp_params(ff: int) -> int:
+            n_in = 2 if self.gated_mlp else 1
+            return n_in * d * ff + ff * d
+
+        if self.family == "ssm":  # rwkv6
+            n_h = d // self.rwkv_head_size
+            tmix = 4 * d * d + d * d  # r,k,v,g,o (w is low-rank, counted below)
+            tmix += 2 * (d * 64 + 64 * d)  # decay + gate low-rank adapters (approx)
+            tmix += n_h * self.rwkv_head_size  # u (bonus)
+            cmix = d * self.d_ff + self.d_ff * d
+            return embed + self.n_layers * (tmix + cmix)
+
+        per_layer = 0
+        if self.family == "moe":
+            assert self.moe is not None
+            e = self.moe.n_experts
+            per_layer = attn_params() + e * mlp_params(self.d_ff) + d * e
+        elif self.family == "hybrid":
+            pat = self.block_pattern or ("rec", "rec", "attn")
+            n_attn = sum(1 for i in range(self.n_layers) if pat[i % len(pat)] == "attn")
+            n_rec = self.n_layers - n_attn
+            # RG-LRU block: linear in/out (d->d each) + gates (2 * d*d low-rank-ish, use d*d)
+            rec = 3 * d * d + 2 * d
+            per_layer = 0
+            total = n_attn * (attn_params() + mlp_params(self.d_ff))
+            total += n_rec * (rec + mlp_params(self.d_ff))
+            return embed + total
+        elif self.family == "encdec":
+            enc = self.n_enc_layers * (attn_params() + mlp_params(self.d_ff))
+            dec = self.n_layers * (2 * attn_params() + mlp_params(self.d_ff))
+            return embed + enc + dec
+        else:  # dense / vlm
+            per_layer = attn_params() + mlp_params(self.d_ff)
+        return embed + self.n_layers * per_layer
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: top_k experts only)."""
+        if self.family != "moe":
+            return self.n_params()
+        assert self.moe is not None
+        full = self.n_params()
+        d = self.d_model
+        n_in = 2 if self.gated_mlp else 1
+        per_expert = n_in * d * self.d_ff + self.d_ff * d
+        inactive = self.n_layers * (self.moe.n_experts - self.moe.top_k) * per_expert
+        return full - inactive
+
+
+# --------------------------------------------------------------------------- #
+# Shapes
+# --------------------------------------------------------------------------- #
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+LM_SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4096, 256, "train"),
+    ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32768, 128, "decode"),
+    ShapeConfig("long_500k", 524288, 1, "decode"),
+)
+
+
+def shapes_for(model: ModelConfig) -> Tuple[ShapeConfig, ...]:
+    """The shape cells that apply to this arch (long_500k needs sub-quadratic)."""
+    out = []
+    for s in LM_SHAPES:
+        if s.name == "long_500k" and not model.is_subquadratic:
+            continue  # skip documented in DESIGN.md §Arch-applicability
+        out.append(s)
+    return tuple(out)
+
+
+# --------------------------------------------------------------------------- #
+# Mesh / distribution
+# --------------------------------------------------------------------------- #
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axes: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def multi_pod(self) -> bool:
+        return "pod" in self.axes
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    def axis_size(self, name: str) -> int:
+        return self.shape[self.axes.index(name)] if name in self.axes else 1
+
+
+SINGLE_POD_MESH = MeshConfig((16, 16), ("data", "model"))
+MULTI_POD_MESH = MeshConfig((2, 16, 16), ("pod", "data", "model"))
+
+
+# --------------------------------------------------------------------------- #
+# Federation (the paper's knobs)
+# --------------------------------------------------------------------------- #
+
+AGG_POLICIES = ("all", "self", "random_k", "top_k", "above_average",
+                "above_median", "above_self")
+SCORE_POLICIES = ("median", "mean", "min", "max")
+SCORERS = ("accuracy", "multikrum", "loss")
+
+
+@dataclass(frozen=True)
+class FedConfig:
+    n_silos: int = 3
+    clients_per_silo: int = 3
+    rounds: int = 10
+    local_epochs: int = 2
+    mode: str = "sync"                 # 'sync' | 'async'
+    scorer: str = "accuracy"           # scoring function
+    agg_policy: str = "all"            # per-silo default aggregation policy
+    score_policy: str = "median"
+    policy_k: int = 2                  # k for random_k / top_k
+    server_opt: str = "fedavg"         # 'fedavg' | 'fedyogi' | 'fedadam' | 'fedadagrad'
+    multikrum_m: int = 2               # krum neighbourhood size
+    # straggler / fault model
+    round_deadline_s: float = 0.0      # 0 = no deadline (sync uses barrier)
+    scorer_deadline_s: float = 5.0
+    heartbeat_s: float = 1.0
+    # compression of exchanged models (beyond-paper)
+    compression: str = "none"          # 'none' | 'int8' | 'topk'
+    topk_frac: float = 0.01
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 0.01
+    optimizer: str = "sgd"             # client/local optimizer (paper: SGD 0.01)
+    momentum: float = 0.0
+    weight_decay: float = 0.0
+    lr_schedule: str = "constant"      # 'constant' | 'wsd' (minicpm)
+    warmup_steps: int = 0
+    decay_frac: float = 0.1
+    batch_size: int = 8
+    seq_len: int = 128
+    steps: int = 100
+    seed: int = 0
+    label_smoothing: float = 0.0
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeConfig
+    mesh: MeshConfig = SINGLE_POD_MESH
+    fed: FedConfig = FedConfig()
+    train: TrainConfig = TrainConfig()
+
+
+def replace(cfg, **kw):
+    return dataclasses.replace(cfg, **kw)

@@ -1,0 +1,11 @@
+"""UnifyFL core: the paper's contribution.
+
+store       -- content-addressed distributed storage (IPFS analogue)
+ledger      -- PoA hash-chained replicated log (private-Ethereum analogue)
+contract    -- the UnifyFL smart contract (paper Algorithm 1)
+scoring     -- accuracy / loss / MultiKRUM scorers (paper §2.6)
+policies    -- aggregation + score policies (paper §3.4.4)
+orchestrator-- Sync / Async round engines with straggler & failure handling
+exchange    -- jittable cross-silo exchange over the 'pod' mesh axis
+compression -- int8 / top-k delta compression for exchanged models
+"""

@@ -1,0 +1,135 @@
+"""Experiment assembly: datasets -> partitions -> clusters -> orchestrator.
+
+This is the programmatic entry point used by tests, benchmarks and examples;
+``repro/launch/train.py`` wraps it in a CLI.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.config import FedConfig, ModelConfig
+from repro.core.orchestrator import (AsyncOrchestrator, BaseOrchestrator,
+                                     SiloPolicy, SyncOrchestrator)
+from repro.data.partition import dirichlet_partition, iid_partition
+from repro.data.synthetic import make_image_dataset, make_lm_dataset
+from repro.fed.client import Client
+from repro.fed.cluster import Cluster
+from repro.models import build_model
+
+
+@dataclass
+class SiloSpec:
+    policy: Optional[SiloPolicy] = None
+    server_opt: str = "fedavg"
+    byzantine: Optional[str] = None
+    extra_train_delay: float = 0.0
+    extra_score_delay: float = 0.0
+
+
+def build_image_experiment(model_cfg: ModelConfig, fed: FedConfig, *,
+                           partition: str = "niid", alpha: float = 0.5,
+                           n_train: int = 3000, n_test: int = 600,
+                           batch_size: int = 32, lr: float = 0.01,
+                           silo_specs: Optional[Sequence[SiloSpec]] = None,
+                           seed: int = 0):
+    """The paper's CIFAR-like workload: one model config, n_silos clusters of
+    clients_per_silo clients each, IID or Dirichlet-NIID partitioned."""
+    data = make_image_dataset(n_classes=model_cfg.vocab_size, n_train=n_train,
+                              n_test=n_test, seed=seed)
+    x, y = data["train"]
+    xt, yt = data["test"]
+    # NIID skew is a *silo-level* property (paper: each org's fleet sees its
+    # own distribution); clients within a silo split their silo's shard IID
+    if partition == "iid":
+        silo_parts = iid_partition(len(x), fed.n_silos, seed=seed)
+    else:
+        silo_parts = dirichlet_partition(y, fed.n_silos, alpha, seed=seed)
+    parts = []
+    for sp in silo_parts:
+        sub = iid_partition(len(sp), fed.clients_per_silo, seed=seed + 7)
+        parts.extend([sp[s] for s in sub])
+    # each silo also gets a private test shard (its scoring set)
+    test_parts = iid_partition(len(xt), fed.n_silos, seed=seed + 1)
+
+    orch_cls = SyncOrchestrator if fed.mode == "sync" else AsyncOrchestrator
+    orch = orch_cls(fed)
+    specs = list(silo_specs or [SiloSpec() for _ in range(fed.n_silos)])
+    model = build_model(model_cfg)
+    for i in range(fed.n_silos):
+        spec = specs[i]
+        clients = []
+        for j in range(fed.clients_per_silo):
+            p = parts[i * fed.clients_per_silo + j]
+            clients.append(Client(
+                f"silo{i}/client{j}", model,
+                {"x": x[p], "y": y[p]}, batch_size=batch_size, lr=lr,
+                seed=seed * 100 + i * 10 + j))
+        tp = test_parts[i]
+        # common init across silos (seed) — FedAvg across independently
+        # initialized nets is destructive (permutation misalignment)
+        cluster = Cluster(f"silo{i}", model, clients,
+                          test_data={"x": xt[tp], "y": yt[tp]},
+                          server_opt=spec.server_opt,
+                          local_epochs=fed.local_epochs,
+                          byzantine=spec.byzantine, seed=seed)
+        orch.add_silo(cluster, policy=spec.policy,
+                      extra_train_delay=spec.extra_train_delay,
+                      extra_score_delay=spec.extra_score_delay)
+    # the shared global test set for reporting 'global accuracy'
+    orch.global_test = {"x": xt, "y": yt}
+    return orch
+
+
+def build_lm_experiment(model_cfg: ModelConfig, fed: FedConfig, *,
+                        seq_len: int = 128, batch_size: int = 8,
+                        steps_per_epoch: int = 8, lr: float = 0.05,
+                        stream_len: int = 60_000,
+                        silo_specs: Optional[Sequence[SiloSpec]] = None,
+                        seed: int = 0):
+    """Federated LM training: per-silo Markov 'dialects' (NIID streams)."""
+    streams = make_lm_dataset(vocab=model_cfg.vocab_size, length=stream_len,
+                              n_dialects=fed.n_silos, seed=seed)
+    orch_cls = SyncOrchestrator if fed.mode == "sync" else AsyncOrchestrator
+    orch = orch_cls(fed)
+    specs = list(silo_specs or [SiloSpec() for _ in range(fed.n_silos)])
+    model = build_model(model_cfg)
+    for i in range(fed.n_silos):
+        spec = specs[i]
+        stream = streams[i]
+        cut = int(len(stream) * 0.9)
+        shard = len(range(0, cut)) // fed.clients_per_silo
+        clients = []
+        for j in range(fed.clients_per_silo):
+            sub = stream[j * shard:(j + 1) * shard]
+            clients.append(Client(
+                f"silo{i}/client{j}", model,
+                {"tokens": sub, "seq_len": seq_len,
+                 "steps_per_epoch": steps_per_epoch},
+                batch_size=batch_size, lr=lr, seed=seed * 100 + i * 10 + j))
+        cluster = Cluster(f"silo{i}", model, clients,
+                          test_data={"tokens": stream[cut:], "seq_len": seq_len},
+                          server_opt=spec.server_opt,
+                          local_epochs=fed.local_epochs,
+                          byzantine=spec.byzantine, seed=seed)
+        orch.add_silo(cluster, policy=spec.policy,
+                      extra_train_delay=spec.extra_train_delay,
+                      extra_score_delay=spec.extra_score_delay)
+    return orch
+
+
+def global_eval(orch: BaseOrchestrator) -> Dict[str, Dict[str, float]]:
+    """Evaluate each silo's current model on the shared global test set."""
+    out = {}
+    gt = getattr(orch, "global_test", None)
+    for s in orch.silos:
+        if gt is not None:
+            saved = s.cluster.test_data
+            s.cluster.test_data = gt
+            out[s.silo_id] = s.cluster.evaluate()
+            s.cluster.test_data = saved
+        else:
+            out[s.silo_id] = s.cluster.evaluate()
+    return out

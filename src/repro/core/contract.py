@@ -1,0 +1,229 @@
+"""The UnifyFL smart contract (paper Algorithm 1) as a deterministic state
+machine executed by the ledger.
+
+  startTraining()                 -- opens the training phase (Sync), emits
+                                     StartTraining to subscribed aggregators.
+  submitModel(cid)                -- validated trainer submits a model CID.
+                                     Async: scorers are assigned immediately
+                                     from idle aggregators.
+  startScoring()                  -- Sync: samples floor(N/2)+1 scorers per
+                                     submitted model (de-biased majority,
+                                     paper step 2), emits StartScoring.
+  submitScore(cid, score)         -- validated, *assigned* scorer submits a
+                                     score; late Sync scores are disregarded
+                                     (paper §3.2 'blockchain will no longer
+                                     accept scores').
+  getLatestModelsWithScores()     -- view: latest model set + score lists.
+
+Scorer sampling uses block-hash randomness (on-chain determinism). Elastic
+membership (register/deregister), heartbeats, and deadline-based scorer
+reassignment extend the paper's design to node-failure handling.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Set
+
+PHASE_IDLE = "idle"
+PHASE_TRAINING = "training"
+PHASE_SCORING = "scoring"
+
+
+@dataclass
+class ModelEntry:
+    cid: str
+    owner: str
+    round: int
+    scores: Dict[str, float] = field(default_factory=dict)
+    assigned: List[str] = field(default_factory=list)
+    finalized: bool = False
+
+
+class UnifyFLContract:
+    def __init__(self, mode: str = "sync"):
+        assert mode in ("sync", "async")
+        self.mode = mode
+        self.aggregators: Set[str] = set()
+        self.round = 0
+        self.phase = PHASE_IDLE
+        self.models: Dict[str, ModelEntry] = {}          # cid -> entry
+        self.latest_by_owner: Dict[str, str] = {}        # owner -> cid
+        self.deferred: List[Dict] = []                   # sync stragglers
+        self.busy: Set[str] = set()                      # async idle tracking
+        self.heartbeats: Dict[str, float] = {}
+        self._emit = lambda e, p: None                   # wired by ledger
+        self.log: List[Dict] = []
+
+    # ------------------------------------------------------------------ #
+    def execute(self, tx, blk) -> Any:
+        handler = getattr(self, "tx_" + tx.method, None)
+        if handler is None:
+            raise ValueError(f"unknown contract method {tx.method}")
+        ret = handler(sender=tx.sender, blk=blk, **tx.args)
+        self.log.append({"method": tx.method, "sender": tx.sender,
+                         "block": blk.height})
+        return ret
+
+    def _require(self, cond: bool, msg: str):
+        if not cond:
+            raise PermissionError(f"contract revert: {msg}")
+
+    # -- membership (elastic) ------------------------------------------- #
+    def tx_register(self, sender: str, blk=None, **_) -> bool:
+        self.aggregators.add(sender)
+        self.heartbeats[sender] = blk.logical_time if blk else 0.0
+        self._emit("AggregatorRegistered", {"agg": sender})
+        return True
+
+    def tx_deregister(self, sender: str, blk=None, **_) -> bool:
+        self.aggregators.discard(sender)
+        self.busy.discard(sender)
+        self._emit("AggregatorDeregistered", {"agg": sender})
+        return True
+
+    def tx_heartbeat(self, sender: str, blk=None, **_) -> bool:
+        self.heartbeats[sender] = blk.logical_time if blk else 0.0
+        return True
+
+    def tx_set_busy(self, sender: str, busy: bool, blk=None, **_) -> bool:
+        (self.busy.add if busy else self.busy.discard)(sender)
+        return True
+
+    # -- training phase --------------------------------------------------- #
+    def tx_start_training(self, sender: str, blk=None, **_) -> int:
+        self._require(self.mode == "sync", "start_training is a Sync call")
+        self.round += 1
+        self.phase = PHASE_TRAINING
+        # deferred straggler submissions land in this round (paper §3.2)
+        for d in self.deferred:
+            self._accept_model(d["cid"], d["owner"])
+        self.deferred = []
+        self._emit("StartTraining", {"round": self.round})
+        return self.round
+
+    # -- model submission --------------------------------------------------- #
+    def _accept_model(self, cid: str, owner: str):
+        entry = ModelEntry(cid=cid, owner=owner, round=self.round)
+        self.models[cid] = entry
+        self.latest_by_owner[owner] = cid
+        self._emit("ModelSubmitted", {"cid": cid, "owner": owner,
+                                      "round": self.round})
+        return entry
+
+    def tx_submit_model(self, sender: str, cid: str, blk=None, **_) -> bool:
+        self._require(sender in self.aggregators, f"{sender} not registered")
+        if self.mode == "sync":
+            if self.phase != PHASE_TRAINING:
+                # straggler: submission deferred to the next round
+                self.deferred.append({"cid": cid, "owner": sender})
+                self._emit("SubmissionDeferred", {"cid": cid, "owner": sender})
+                return False
+            self._accept_model(cid, sender)
+            return True
+        # async: accept anytime; assign scorers immediately from idle aggs
+        if self.round == 0:
+            self.round = 1
+        entry = self._accept_model(cid, sender)
+        self._assign_scorers(entry, blk)
+        return True
+
+    # -- scoring phase ------------------------------------------------------ #
+    def _sample_scorers(self, entry: ModelEntry, blk, pool: List[str]) -> List[str]:
+        n = len(self.aggregators)
+        need = n // 2 + 1  # the paper's de-biasing majority
+        rng = random.Random((int(blk.hash[:16], 16) if blk else 0)
+                            ^ hash(entry.cid) & 0xFFFFFFFF)
+        pool = sorted(pool)
+        rng.shuffle(pool)
+        return pool[:need]
+
+    def _assign_scorers(self, entry: ModelEntry, blk):
+        if self.mode == "async":
+            idle = [a for a in self.aggregators if a not in self.busy]
+            pool = idle if len(idle) > len(self.aggregators) // 2 \
+                else sorted(self.aggregators)
+        else:
+            pool = sorted(self.aggregators)
+        # a silo never scores its own model (when the pool allows it)
+        non_owner = [a for a in pool if a != entry.owner]
+        n = len(self.aggregators)
+        if len(non_owner) >= n // 2 + 1:
+            pool = non_owner
+        entry.assigned = self._sample_scorers(entry, blk, pool)
+        self._emit("StartScoring", {"cid": entry.cid,
+                                    "scorers": entry.assigned,
+                                    "round": entry.round})
+
+    def tx_start_scoring(self, sender: str, blk=None, **_) -> Dict[str, List[str]]:
+        self._require(self.mode == "sync", "start_scoring is a Sync call")
+        self._require(self.phase == PHASE_TRAINING, "not in training phase")
+        self.phase = PHASE_SCORING
+        out = {}
+        for cid, entry in self.models.items():
+            if entry.round == self.round and not entry.finalized:
+                self._assign_scorers(entry, blk)
+                out[cid] = entry.assigned
+        return out
+
+    def tx_submit_score(self, sender: str, cid: str, score: float,
+                        blk=None, **_) -> bool:
+        self._require(sender in self.aggregators, f"{sender} not registered")
+        entry = self.models.get(cid)
+        self._require(entry is not None, f"unknown model {cid}")
+        self._require(sender in entry.assigned,
+                      f"{sender} not an assigned scorer for {cid}")
+        if self.mode == "sync" and (self.phase != PHASE_SCORING
+                                    or entry.round != self.round):
+            # late score: disregarded (paper §3.2)
+            self._emit("ScoreRejectedLate", {"cid": cid, "scorer": sender})
+            return False
+        entry.scores[sender] = float(score)
+        self._emit("ScoreSubmitted", {"cid": cid, "scorer": sender,
+                                      "score": float(score)})
+        return True
+
+    def tx_end_scoring(self, sender: str, blk=None, **_) -> int:
+        self._require(self.mode == "sync", "end_scoring is a Sync call")
+        self.phase = PHASE_IDLE
+        for entry in self.models.values():
+            if entry.round == self.round:
+                entry.finalized = True
+        self._emit("RoundFinalized", {"round": self.round})
+        return self.round
+
+    def tx_reassign_scorer(self, sender: str, cid: str, dead: str,
+                           blk=None, **_) -> Optional[str]:
+        """Straggler/failure mitigation: replace a non-responsive scorer."""
+        entry = self.models.get(cid)
+        self._require(entry is not None, f"unknown model {cid}")
+        if dead not in entry.assigned or dead in entry.scores:
+            return None
+        candidates = [a for a in sorted(self.aggregators)
+                      if a not in entry.assigned and a != entry.owner]
+        if not candidates:
+            entry.assigned.remove(dead)
+            return None
+        rng = random.Random(int(blk.hash[:16], 16) if blk else 0)
+        repl = rng.choice(candidates)
+        entry.assigned[entry.assigned.index(dead)] = repl
+        self._emit("ScorerReassigned", {"cid": cid, "dead": dead, "new": repl})
+        return repl
+
+    # -- views ---------------------------------------------------------------- #
+    def get_latest_models_with_scores(self, exclude_owner: Optional[str] = None
+                                      ) -> List[Dict]:
+        out = []
+        for owner, cid in sorted(self.latest_by_owner.items()):
+            if owner == exclude_owner:
+                continue
+            e = self.models[cid]
+            out.append({"cid": cid, "owner": owner, "round": e.round,
+                        "scores": dict(e.scores)})
+        return out
+
+    def get_round_models(self, rnd: int) -> List[ModelEntry]:
+        return [e for e in self.models.values() if e.round == rnd]
+
+    def quorum(self) -> int:
+        return len(self.aggregators) // 2 + 1

@@ -1,0 +1,172 @@
+"""Replicated ordered ledger — the private-Ethereum analogue (paper §2.3).
+
+What the paper needs from its Geth/Clique chain is: (i) a total order over
+transactions visible to all silos, (ii) immutability / auditability,
+(iii) leader rotation without proof-of-work, (iv) deterministic contract
+execution with events. This module provides exactly that interface as a
+deterministic state machine:
+
+  - Blocks are hash-chained (prev_hash -> hash) and sealed round-robin by the
+    authorized sealer set (Clique PoA).
+  - Transactions are applied to registered contracts in block order; contract
+    event emissions are delivered to subscribers.
+  - The chain persists as JSONL and replays on restart (crash recovery), and
+    verify() re-checks the whole hash chain (audit).
+  - 'On-chain randomness' for scorer sampling is derived from the block hash,
+    as the paper's smart contract would.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+
+@dataclass
+class Tx:
+    sender: str
+    method: str
+    args: Dict[str, Any]
+    nonce: int = 0
+
+    def to_json(self) -> Dict:
+        return {"sender": self.sender, "method": self.method,
+                "args": self.args, "nonce": self.nonce}
+
+
+@dataclass
+class Block:
+    height: int
+    prev_hash: str
+    sealer: str
+    txs: List[Tx]
+    logical_time: float
+    hash: str = ""
+
+    def compute_hash(self) -> str:
+        body = json.dumps({
+            "height": self.height, "prev": self.prev_hash,
+            "sealer": self.sealer, "time": self.logical_time,
+            "txs": [t.to_json() for t in self.txs]}, sort_keys=True)
+        return hashlib.sha256(body.encode()).hexdigest()
+
+
+class Ledger:
+    """Single logical chain (every silo holds a replica; determinism of the
+    contract state machine guarantees replica agreement)."""
+
+    def __init__(self, sealers: List[str], *, path: Optional[str] = None,
+                 block_size: int = 16):
+        if not sealers:
+            raise ValueError("need at least one PoA sealer")
+        self.sealers = list(sealers)
+        self.blocks: List[Block] = []
+        self.pending: List[Tx] = []
+        self.path = path
+        self.block_size = block_size
+        self._contract = None
+        self._subscribers: List[Callable[[str, Dict], None]] = []
+        self._lock = threading.RLock()
+        self._nonce = 0
+        self.stats = {"txs": 0, "blocks": 0, "bytes": 0}
+        if path and os.path.exists(path):
+            self._replay()
+
+    # -- wiring -------------------------------------------------------------- #
+    def attach_contract(self, contract) -> None:
+        self._contract = contract
+        contract._emit = self._emit
+
+    def subscribe(self, fn: Callable[[str, Dict], None]) -> None:
+        self._subscribers.append(fn)
+
+    def _emit(self, event: str, payload: Dict) -> None:
+        for fn in list(self._subscribers):
+            fn(event, payload)
+
+    # -- chain ---------------------------------------------------------------- #
+    @property
+    def head_hash(self) -> str:
+        return self.blocks[-1].hash if self.blocks else "genesis"
+
+    @property
+    def height(self) -> int:
+        return len(self.blocks)
+
+    def submit(self, sender: str, method: str, logical_time: float = 0.0,
+               **args) -> Any:
+        """Submit a tx; seals immediately (block_size=1 semantics by default
+        for responsiveness — Clique with period=0 seals on demand)."""
+        with self._lock:
+            self._nonce += 1
+            tx = Tx(sender, method, args, self._nonce)
+            self.pending.append(tx)
+            self.stats["txs"] += 1
+            return self.seal(logical_time)
+
+    def seal(self, logical_time: float = 0.0) -> Any:
+        """Seal pending txs into a block and execute them on the contract."""
+        with self._lock:
+            if not self.pending:
+                return None
+            sealer = self.sealers[self.height % len(self.sealers)]
+            blk = Block(self.height, self.head_hash, sealer,
+                        self.pending, logical_time)
+            blk.hash = blk.compute_hash()
+            self.blocks.append(blk)
+            self.pending = []
+            self.stats["blocks"] += 1
+            ret = None
+            if self._contract is not None:
+                for tx in blk.txs:
+                    ret = self._contract.execute(tx, blk)
+            if self.path:
+                self._persist(blk)
+            return ret
+
+    def block_randomness(self, height: int = -1) -> int:
+        """Deterministic 'on-chain' randomness from a block hash."""
+        blk = self.blocks[height]
+        return int(blk.hash[:16], 16)
+
+    def verify(self) -> bool:
+        prev = "genesis"
+        for blk in self.blocks:
+            if blk.prev_hash != prev or blk.hash != blk.compute_hash():
+                return False
+            if blk.sealer not in self.sealers:
+                return False
+            prev = blk.hash
+        return True
+
+    # -- persistence / crash recovery ---------------------------------------- #
+    def _persist(self, blk: Block) -> None:
+        rec = {"height": blk.height, "prev": blk.prev_hash,
+               "sealer": blk.sealer, "time": blk.logical_time,
+               "hash": blk.hash, "txs": [t.to_json() for t in blk.txs]}
+        line = json.dumps(rec) + "\n"
+        self.stats["bytes"] += len(line)
+        with open(self.path, "a") as f:
+            f.write(line)
+
+    def _replay(self) -> None:
+        with open(self.path) as f:
+            for line in f:
+                rec = json.loads(line)
+                txs = [Tx(t["sender"], t["method"], t["args"], t["nonce"])
+                       for t in rec["txs"]]
+                blk = Block(rec["height"], rec["prev"], rec["sealer"], txs,
+                            rec["time"], rec["hash"])
+                self.blocks.append(blk)
+                self._nonce = max(self._nonce, max((t.nonce for t in txs),
+                                                   default=0))
+
+    def replay_into(self, contract) -> None:
+        """Re-execute the whole chain into a fresh contract (restart path)."""
+        self.attach_contract(contract)
+        for blk in self.blocks:
+            for tx in blk.txs:
+                contract.execute(tx, blk)

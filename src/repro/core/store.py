@@ -1,0 +1,178 @@
+"""Content-addressed store — the IPFS analogue (paper §2.4, §3.4.2).
+
+Properties kept from IPFS: content addressing (CID = SHA-256 of canonical
+bytes), integrity verification on fetch, immutability, per-node local blocks
+with peer fetch-and-cache (DHT-like), pinning, and hosting store nodes on the
+aggregator machines themselves. Serialization is a deterministic pytree codec
+(JSON header + raw array bytes), optionally chunked like IPFS blocks.
+
+A ``StoreNetwork`` connects per-silo ``StoreNode``s; ``get`` falls back to
+peers and caches locally (exactly the IPFS behaviour the paper relies on for
+"scorers pull model weights").
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+CHUNK_BYTES = 1 << 20  # 1 MiB blocks, IPFS-style
+
+
+# --------------------------------------------------------------------------- #
+# Deterministic pytree codec
+# --------------------------------------------------------------------------- #
+
+def serialize_pytree(tree) -> bytes:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    arrs = [np.asarray(l) for l in leaves]
+    header = {
+        "treedef": str(treedef),
+        "leaves": [{"dtype": str(a.dtype), "shape": list(a.shape)} for a in arrs],
+        "paths": [_path_str(p) for p, _ in
+                  jax.tree_util.tree_flatten_with_path(tree)[0]],
+    }
+    hb = json.dumps(header, sort_keys=True).encode()
+    out = [len(hb).to_bytes(8, "little"), hb]
+    for a in arrs:
+        out.append(np.ascontiguousarray(a).tobytes())
+    return b"".join(out)
+
+
+def _path_str(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def deserialize_pytree(data: bytes, like=None):
+    """If ``like`` (a pytree prototype) is given, reconstruct its structure;
+    otherwise return a flat dict path -> array."""
+    hlen = int.from_bytes(data[:8], "little")
+    header = json.loads(data[8:8 + hlen].decode())
+    off = 8 + hlen
+    arrs = []
+    for spec in header["leaves"]:
+        dt = np.dtype(spec["dtype"])
+        n = int(np.prod(spec["shape"])) if spec["shape"] else 1
+        nb = n * dt.itemsize
+        a = np.frombuffer(data[off:off + nb], dtype=dt).reshape(spec["shape"])
+        arrs.append(a)
+        off += nb
+    if like is not None:
+        treedef = jax.tree_util.tree_structure(like)
+        return jax.tree_util.tree_unflatten(treedef, arrs)
+    return dict(zip(header["paths"], arrs))
+
+
+def compute_cid(data: bytes) -> str:
+    return "bafy" + hashlib.sha256(data).hexdigest()
+
+
+# --------------------------------------------------------------------------- #
+# Store nodes + network
+# --------------------------------------------------------------------------- #
+
+class StoreNode:
+    """One per silo (hosted on the aggregator node, paper §3.4.2)."""
+
+    def __init__(self, node_id: str, root: Optional[str] = None):
+        self.node_id = node_id
+        self.root = root
+        self._blocks: Dict[str, List[bytes]] = {}
+        self._pins: set = set()
+        self._peers: List["StoreNode"] = []
+        self._lock = threading.Lock()
+        self.stats = {"puts": 0, "gets": 0, "peer_fetches": 0,
+                      "bytes_stored": 0, "bytes_fetched": 0}
+        if root:
+            os.makedirs(root, exist_ok=True)
+
+    # -- network wiring ---------------------------------------------------- #
+    def connect(self, peer: "StoreNode"):
+        if peer is not self and peer not in self._peers:
+            self._peers.append(peer)
+
+    # -- API ---------------------------------------------------------------- #
+    def put(self, obj, *, pin: bool = True) -> str:
+        data = serialize_pytree(obj) if not isinstance(obj, bytes) else obj
+        cid = compute_cid(data)
+        chunks = [data[i:i + CHUNK_BYTES] for i in range(0, len(data), CHUNK_BYTES)] or [b""]
+        with self._lock:
+            self._blocks[cid] = chunks
+            if pin:
+                self._pins.add(cid)
+            self.stats["puts"] += 1
+            self.stats["bytes_stored"] += len(data)
+        if self.root:
+            with open(os.path.join(self.root, cid), "wb") as f:
+                f.write(data)
+        return cid
+
+    def has(self, cid: str) -> bool:
+        return cid in self._blocks or (
+            self.root and os.path.exists(os.path.join(self.root, cid)))
+
+    def get_bytes(self, cid: str) -> bytes:
+        with self._lock:
+            if cid in self._blocks:
+                self.stats["gets"] += 1
+                return b"".join(self._blocks[cid])
+        if self.root:
+            p = os.path.join(self.root, cid)
+            if os.path.exists(p):
+                with open(p, "rb") as f:
+                    return f.read()
+        # DHT-ish: fetch from peers, verify, cache locally
+        for peer in self._peers:
+            if peer.has(cid):
+                data = peer.get_bytes(cid)
+                if compute_cid(data) != cid:  # integrity check
+                    raise IOError(f"integrity failure fetching {cid} "
+                                  f"from {peer.node_id}")
+                with self._lock:
+                    self._blocks[cid] = [data[i:i + CHUNK_BYTES]
+                                         for i in range(0, len(data), CHUNK_BYTES)] or [b""]
+                    self.stats["peer_fetches"] += 1
+                    self.stats["bytes_fetched"] += len(data)
+                return data
+        raise KeyError(f"CID {cid} not found on {self.node_id} or peers")
+
+    def get(self, cid: str, like=None):
+        return deserialize_pytree(self.get_bytes(cid), like)
+
+    def pin(self, cid: str):
+        self._pins.add(cid)
+
+    def gc(self):
+        """Drop unpinned blocks (IPFS gc)."""
+        with self._lock:
+            for cid in list(self._blocks):
+                if cid not in self._pins:
+                    del self._blocks[cid]
+
+
+class StoreNetwork:
+    """Fully-connected private swarm of silo store nodes."""
+
+    def __init__(self):
+        self.nodes: Dict[str, StoreNode] = {}
+
+    def add_node(self, node_id: str, root: Optional[str] = None) -> StoreNode:
+        node = StoreNode(node_id, root)
+        for other in self.nodes.values():
+            node.connect(other)
+            other.connect(node)
+        self.nodes[node_id] = node
+        return node
+
+    def drop_node(self, node_id: str):
+        """Simulate a node failure: disconnect it from the swarm."""
+        node = self.nodes.pop(node_id)
+        for other in self.nodes.values():
+            if node in other._peers:
+                other._peers.remove(node)
+        return node

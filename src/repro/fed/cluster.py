@@ -1,0 +1,103 @@
+"""An FL cluster (= silo = organization): one aggregator + its clients.
+
+This is the unit UnifyFL coordinates. The cluster runs single-level FL
+internally (clients -> FedAvg), evaluates on its private test set (which also
+serves as its scoring set when the silo acts as a scorer), and may be
+byzantine (submitting poisoned models — paper Figure 7).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fed.aggregator import SiloAggregator
+from repro.fed.client import Client
+from repro.models.api import Model
+
+
+class Cluster:
+    def __init__(self, silo_id: str, model: Model, clients: List[Client], *,
+                 test_data: Dict[str, np.ndarray], server_opt: str = "fedavg",
+                 local_epochs: int = 2, byzantine: Optional[str] = None,
+                 seed: int = 0):
+        self.silo_id = silo_id
+        self.model = model
+        self.clients = clients
+        self.test_data = test_data
+        self.aggregator = SiloAggregator(silo_id, server_opt)
+        self.local_epochs = local_epochs
+        self.byzantine = byzantine
+        self.params = model.init(jax.random.PRNGKey(seed))
+        self.round = 0
+        self.history: List[Dict] = []
+        self._eval_fn = None
+
+    # ------------------------------------------------------------------ #
+    def train_round(self) -> Dict:
+        """One local FL round: fan out to clients, FedAvg their results.
+        Returns metrics; updates self.params (the silo 'local model')."""
+        t0 = time.perf_counter()
+        results = [c.local_train(self.params, self.local_epochs)
+                   for c in self.clients]
+        self.params = self.aggregator.aggregate_clients(results)
+        if self.byzantine == "signflip":
+            self.params = jax.tree.map(lambda p: -p, self.params)
+        elif self.byzantine == "noise":
+            rng = np.random.default_rng((self.round, 13))
+            self.params = jax.tree.map(
+                lambda p: p + jnp.asarray(rng.normal(0, 0.5, p.shape), p.dtype),
+                self.params)
+        self.round += 1
+        wall = time.perf_counter() - t0
+        mean_loss = float(np.mean([r[2] for r in results]))
+        return {"round": self.round, "client_loss": mean_loss, "wall_s": wall}
+
+    # ------------------------------------------------------------------ #
+    def evaluate(self, params=None) -> Dict[str, float]:
+        """Accuracy/loss of a model on this silo's private test set."""
+        params = self.params if params is None else params
+        if self._eval_fn is None:
+            model = self.model
+
+            @jax.jit
+            def ev(p, batch):
+                loss, metrics = model.loss(p, batch)
+                return metrics
+
+            self._eval_fn = ev
+        td = self.test_data
+        if "x" in td:
+            losses, accs, n = [], [], len(td["x"])
+            bs = 256
+            for i in range(0, n, bs):
+                batch = {"image": jnp.asarray(td["x"][i:i + bs]),
+                         "label": jnp.asarray(td["y"][i:i + bs])}
+                m = self._eval_fn(params, batch)
+                losses.append(float(m["loss"]) * len(td["x"][i:i + bs]))
+                accs.append(float(m.get("accuracy", 0.0)) * len(td["x"][i:i + bs]))
+            return {"loss": sum(losses) / n, "accuracy": sum(accs) / n}
+        # LM eval: perplexity over a few windows
+        stream, seq = td["tokens"], td.get("seq_len", 128)
+        losses = []
+        for i in range(0, min(len(stream) - seq - 1, 4 * seq), seq):
+            batch = {"tokens": jnp.asarray(stream[None, i:i + seq], jnp.int32),
+                     "targets": jnp.asarray(stream[None, i + 1:i + seq + 1], jnp.int32)}
+            m = self._eval_fn(params, batch)
+            losses.append(float(m["loss"]))
+        loss = float(np.mean(losses)) if losses else 0.0
+        return {"loss": loss, "accuracy": float(np.exp(-loss))}
+
+    # ------------------------------------------------------------------ #
+    def score_model(self, params, method: str = "accuracy") -> float:
+        """Score a peer model on the silo's private test set (paper §2.6:
+        accuracy scoring works in both sync and async modes)."""
+        m = self.evaluate(params)
+        if method == "accuracy":
+            return m["accuracy"]
+        if method == "loss":
+            return -m["loss"]
+        raise ValueError(method)

@@ -1,0 +1,54 @@
+"""Pallas kernel: pairwise squared-L2 Gram accumulation for MultiKRUM scoring.
+
+The paper's MultiKRUM scorer needs all-pairs distances between the M silo
+models submitted in a round (M <= 64) whose flattened length N is huge
+(62K for the paper's CNN, up to 1e11 for the assigned archs). The kernel
+streams N in VMEM tiles, accumulating the Gram matrix G = X X^T and the
+per-model squared norms; the [M, M] distance matrix falls out as
+sq[i] + sq[j] - 2 G[ij].
+
+Memory-bound: one pass over M*N elements; arithmetic intensity ~M flops/elem,
+so for M >= 16 the MXU matmul tile keeps up with HBM easily.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 2048
+
+
+def _kernel(x_ref, g_ref, sq_ref):
+    """Grid step over N tiles. x_ref: [M, TILE_N]; accumulates G and sq."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        sq_ref[...] = jnp.zeros_like(sq_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    g_ref[...] += jax.lax.dot_general(
+        x, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    sq_ref[...] += jnp.sum(x * x, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gram_and_norms(x, *, interpret: bool = False):
+    """x: [M, N] (N % TILE_N == 0) -> (G [M,M] f32, sq [M,1] f32)."""
+    M, N = x.shape
+    assert N % TILE_N == 0, f"pad N to a multiple of {TILE_N}"
+    grid = (N // TILE_N,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((M, TILE_N), lambda i: (0, i))],
+        out_specs=[pl.BlockSpec((M, M), lambda i: (0, 0)),
+                   pl.BlockSpec((M, 1), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((M, M), jnp.float32),
+                   jax.ShapeDtypeStruct((M, 1), jnp.float32)],
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,145 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+On TPU the pallas path compiles natively; elsewhere (this CPU container) the
+same kernel body runs under ``interpret=True`` so numerics are identical and
+every kernel is exercised end-to-end. ``force='ref'`` selects the pure-jnp
+oracle (used by tests to cross-validate).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import multikrum as _mk
+from repro.kernels import quant as _q
+from repro.kernels import ref as _ref
+from repro.kernels import rwkv6 as _rwkv
+from repro.kernels import wsum as _ws
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, axis: int, multiple: int, value=0.0):
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+# --------------------------------------------------------------------------- #
+# Flatten helpers (model pytree <-> single vector)
+# --------------------------------------------------------------------------- #
+
+def flatten_pytree(params):
+    """Pytree -> (vector f32 [N], treedef+shapes for unflatten)."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    shapes = [(l.shape, l.dtype) for l in leaves]
+    vec = jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in leaves]) \
+        if leaves else jnp.zeros((0,), jnp.float32)
+    return vec, (treedef, shapes)
+
+
+def unflatten_pytree(vec, spec):
+    treedef, shapes = spec
+    leaves = []
+    off = 0
+    for shape, dtype in shapes:
+        n = int(np.prod(shape)) if shape else 1
+        leaves.append(jnp.reshape(vec[off:off + n], shape).astype(dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# --------------------------------------------------------------------------- #
+# MultiKRUM
+# --------------------------------------------------------------------------- #
+
+def pairwise_dists(x, force: str = "auto"):
+    """x: [M, N] -> pairwise squared L2 [M, M]."""
+    if force == "ref":
+        return _ref.multikrum_dists(x)
+    xp = _pad_to(x, 1, _mk.TILE_N)
+    g, sq = _mk.gram_and_norms(xp, interpret=_interpret())
+    d = sq + sq.T - 2.0 * g
+    return jnp.maximum(d, 0.0)
+
+
+def multikrum_scores(x, m: int, force: str = "auto"):
+    """Sum of squared distances to the m nearest peers (lower = better)."""
+    if force == "ref":
+        return _ref.multikrum_scores(x, m)
+    d = pairwise_dists(x, force)
+    M = d.shape[0]
+    d = d + jnp.diag(jnp.full((M,), jnp.inf))
+    m = min(m, M - 1)
+    return jnp.sum(jnp.sort(d, axis=1)[:, :m], axis=1)
+
+
+# --------------------------------------------------------------------------- #
+# Weighted aggregation
+# --------------------------------------------------------------------------- #
+
+def weighted_sum(x, w, force: str = "auto"):
+    """x: [M, N], w: [M] -> [N]."""
+    if force == "ref":
+        return _ref.weighted_sum(x, w)
+    N = x.shape[1]
+    xp = _pad_to(x, 1, _ws.TILE_N)
+    return _ws.weighted_sum(xp, w, interpret=_interpret())[:N]
+
+
+# --------------------------------------------------------------------------- #
+# int8 compression
+# --------------------------------------------------------------------------- #
+
+QUANT_BLOCK = _q.TILE * _q.LANE
+
+
+def quantize(x, force: str = "auto"):
+    """x: [N] -> (q int8 [Np], scales [Np/TILE], N) with Np padded."""
+    N = x.shape[0]
+    if force == "ref":
+        xp = _pad_to(x, 0, _q.TILE)
+        q, s = _ref.quantize_int8(xp, _q.TILE)
+        return q, s, N
+    xp = _pad_to(x, 0, QUANT_BLOCK)
+    q, s = _q.quantize(xp, interpret=_interpret())
+    return q, s, N
+
+
+def dequantize(q, scales, n, dtype=jnp.float32, force: str = "auto"):
+    if force == "ref":
+        return _ref.dequantize_int8(q, scales, _q.TILE)[:n].astype(dtype)
+    return _q.dequantize(q, scales, dtype=dtype, interpret=_interpret())[:n]
+
+
+# --------------------------------------------------------------------------- #
+# WKV6
+# --------------------------------------------------------------------------- #
+
+def wkv6(r, k, v, w, u, state, force: str = "auto"):
+    """r,k,v,w: [B, T, H, hs]; u: [H, hs]; state: [B, H, hs, hs]."""
+    if force == "ref":
+        return _ref.wkv6_naive(r, k, v, w, u, state)
+    B, T, H, hs = r.shape
+    fold = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, T, hs)
+    rt, kt, vt = fold(r), fold(k), fold(v)
+    wt = fold(w)
+    pad = (-T) % _rwkv.CHUNK
+    if pad:
+        z = lambda a, cv=0.0: jnp.pad(a, ((0, 0), (0, pad), (0, 0)),
+                                      constant_values=cv)
+        rt, kt, vt, wt = z(rt), z(kt), z(vt), z(wt, 1.0)
+    ub = jnp.broadcast_to(u, (B, H, hs)).reshape(B * H, hs)
+    y, s1 = _rwkv.wkv6(rt, kt, vt, wt, ub, state.reshape(B * H, hs, hs),
+                       interpret=_interpret())
+    y = y[:, :T].reshape(B, H, T, hs).transpose(0, 2, 1, 3)
+    return y, s1.reshape(B, H, hs, hs)

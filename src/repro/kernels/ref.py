@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth for tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def multikrum_dists(x):
+    """x: [M, N] flattened models -> pairwise squared L2 [M, M] (f32)."""
+    xf = x.astype(jnp.float32)
+    sq = jnp.sum(xf * xf, axis=1)
+    g = xf @ xf.T
+    d = sq[:, None] + sq[None, :] - 2.0 * g
+    return jnp.maximum(d, 0.0)
+
+
+def multikrum_scores(x, m: int):
+    """MultiKRUM score per model: sum of distances to its m nearest peers
+    (lower = more central = better). x: [M, N]."""
+    d = multikrum_dists(x)
+    M = d.shape[0]
+    d = d + jnp.diag(jnp.full((M,), jnp.inf))
+    sorted_d = jnp.sort(d, axis=1)
+    m = min(m, M - 1)
+    return jnp.sum(sorted_d[:, :m], axis=1)
+
+
+def weighted_sum(x, w):
+    """x: [M, N] models, w: [M] weights -> [N] aggregate (f32 accumulate)."""
+    return jnp.einsum("m,mn->n", w.astype(jnp.float32),
+                      x.astype(jnp.float32)).astype(x.dtype)
+
+
+def quantize_int8(x, tile: int = 1024):
+    """Symmetric per-tile int8 quantization. x: [N] (N % tile == 0).
+    Returns (q int8 [N], scales f32 [N/tile])."""
+    xt = x.astype(jnp.float32).reshape(-1, tile)
+    amax = jnp.max(jnp.abs(xt), axis=1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xt / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale
+
+
+def dequantize_int8(q, scales, tile: int = 1024):
+    qt = q.reshape(-1, tile).astype(jnp.float32)
+    return (qt * scales[:, None]).reshape(-1)
+
+
+def wkv6_naive(r, k, v, w, u, state):
+    """Token-by-token WKV6 recurrence (oracle for the chunked kernel).
+
+    r,k,v,w: [B, T, H, hs]; u: [H, hs]; state: [B, H, hs, hs].
+    Returns (y [B,T,H,hs], state')."""
+    B, T, H, hs = r.shape
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs  # [B, H, hs]
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhkv,bhk->bhv", S + uf[None, :, :, None] * kv, rt)
+        S = S * wt[..., None] + kv
+        return S, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (rf, kf, vf, wf))
+    S, ys = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), S

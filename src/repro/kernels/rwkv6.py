@@ -1,0 +1,87 @@
+"""Pallas kernel: chunked WKV6 recurrence (RWKV-6 "Finch" time-mix).
+
+The per-(batch*head) recurrence
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T ;  y_t = (S_{t-1} + diag(u) k_t v_t^T)^T r_t
+is evaluated in chunks of C tokens: within a chunk the strictly-causal part is
+an [C, C] matmul against cumulative decay products (kept f32-safe for C = 32),
+the cross-chunk part flows through a VMEM-resident state scratch [hs, hs] that
+persists across the sequential chunk grid dimension.
+
+Grid: (B*H, T/C) with the chunk index minor => chunks execute in order per
+(batch, head) while the MXU sees [C, hs] x [hs, C] tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 32
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, s1_ref, S):
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        S[...] = s0_ref[0]
+
+    rb = r_ref[0].astype(jnp.float32)  # [C, hs]
+    kb = k_ref[0].astype(jnp.float32)
+    vb = v_ref[0].astype(jnp.float32)
+    wb = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)   # [hs]
+
+    logw = jnp.log(jnp.clip(wb, 1e-6, 1.0))
+    c_incl = jnp.cumsum(logw, axis=0)
+    c_excl = c_incl - logw
+    c_tot = c_incl[-1:]                # [1, hs]
+
+    r_dec = rb * jnp.exp(c_excl)
+    k_inv = kb * jnp.exp(-jnp.clip(c_incl, -25.0, 0.0))
+    dot = lambda a, b: jax.lax.dot_general(
+        a, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    A = dot(r_dec, k_inv)              # [C, C]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (CHUNK, CHUNK), 0)
+    jdx = jax.lax.broadcasted_iota(jnp.int32, (CHUNK, CHUNK), 1)
+    A = jnp.where(idx > jdx, A, 0.0)
+    y = jax.lax.dot_general(A, vb, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    bonus = jnp.sum(rb * u[None, :] * kb, axis=1, keepdims=True)
+    y += bonus * vb
+    y += jax.lax.dot_general(r_dec, S[...], (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    k_dec = kb * jnp.exp(c_tot - c_incl)
+    S[...] = S[...] * jnp.exp(c_tot).T + jax.lax.dot_general(
+        k_dec, vb, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    s1_ref[0] = S[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wkv6(r, k, v, w, u, state, *, interpret: bool = False):
+    """r,k,v,w: [BH, T, hs] (T % CHUNK == 0); u: [BH, hs];
+    state: [BH, hs, hs] f32. Returns (y [BH,T,hs], state')."""
+    BH, T, hs = r.shape
+    assert T % CHUNK == 0, f"pad T to a multiple of {CHUNK}"
+    grid = (BH, T // CHUNK)
+    blk_seq = pl.BlockSpec((1, CHUNK, hs), lambda b, j: (b, j, 0))
+    blk_state = pl.BlockSpec((1, hs, hs), lambda b, j: (b, 0, 0))
+    blk_u = pl.BlockSpec((1, hs), lambda b, j: (b, 0))
+    y, s1 = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[blk_seq, blk_seq, blk_seq, blk_seq, blk_u, blk_state],
+        out_specs=[blk_seq, blk_state],
+        out_shape=[jax.ShapeDtypeStruct((BH, T, hs), r.dtype),
+                   jax.ShapeDtypeStruct((BH, hs, hs), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((hs, hs), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, state.astype(jnp.float32))
+    return y, s1

@@ -1,0 +1,41 @@
+"""Pallas kernel: weighted sum of M flattened models (FedAvg/aggregation).
+
+out[n] = sum_m w[m] * x[m, n] — the hot loop of every aggregation policy once
+the model set and weights are chosen. Streams N in VMEM tiles; one HBM pass
+over M*N input elements, f32 accumulation regardless of storage dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 4096
+
+
+def _kernel(w_ref, x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)       # [M, TILE_N]
+    w = w_ref[...].astype(jnp.float32)       # [1, M]
+    o_ref[...] = jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def weighted_sum(x, w, *, interpret: bool = False):
+    """x: [M, N] (N % TILE_N == 0); w: [M] -> [N] in x.dtype."""
+    M, N = x.shape
+    assert N % TILE_N == 0, f"pad N to a multiple of {TILE_N}"
+    grid = (N // TILE_N,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, M), lambda i: (0, 0)),
+                  pl.BlockSpec((M, TILE_N), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, TILE_N), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, N), x.dtype),
+        interpret=interpret,
+    )(w[None, :], x)
+    return out[0]

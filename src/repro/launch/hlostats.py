@@ -1,0 +1,291 @@
+"""HLO-text statistics for the roofline analysis.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, so with
+scan-over-layers it undercounts FLOPs/bytes by the trip count (verified
+empirically in this container). This module parses the *partitioned,
+scheduled* ``compiled.as_text()`` module instead:
+
+  - builds a per-computation name -> shape table (scheduled HLO does not
+    inline operand shapes),
+  - extracts per-op output/operand shapes (PER-DEVICE after SPMD
+    partitioning), dot/conv FLOPs, and collective bytes,
+  - recovers while-loop trip counts from the loop condition's comparison
+    constant and multiplies nested computations accordingly,
+  - aggregates executed totals: FLOPs, an HBM-traffic proxy (operand+output
+    bytes of scheduled top-level ops = fusion boundary traffic), and
+    per-collective bytes with alpha-beta cost factors (all-reduce 2x ring).
+
+Everything is per-device; roofline terms divide by per-chip peaks.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "opaque": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# leading output type(s): f32[1,2]{...} or tuple (f32[..], s32[..])
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"^\s*(?:\([^)]*\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)\s*"
+                        r"([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _prod(shape: Tuple[int, ...]) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    out_shapes: List[Tuple[str, Tuple[int, ...]]]
+    operands: List[str]
+    line: str
+    flops: float = 0.0
+    collective: Optional[str] = None
+    called: List[str] = field(default_factory=list)
+    trip_count: Optional[int] = None
+
+    @property
+    def out_bytes(self) -> int:
+        return sum(_prod(s) * DTYPE_BYTES.get(d, 4) for d, s in self.out_shapes)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    shapes: Dict[str, List[Tuple[str, Tuple[int, ...]]]] = field(default_factory=dict)
+    max_constant: int = 0
+
+    def operand_bytes(self, op: Op) -> int:
+        total = 0
+        for o in op.operands:
+            for d, s in self.shapes.get(o, []):
+                total += _prod(s) * DTYPE_BYTES.get(d, 4)
+        return total
+
+
+def _out_shapes_of(rest: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Shapes before the opcode '(' — the op's output type (maybe a tuple)."""
+    paren = rest.find("(")
+    # tuple outputs start with '(': find the opcode position instead
+    m = _OPCODE_RE.match(rest)
+    cut = rest.index(m.group(1) + "(") if m else (paren if paren >= 0 else len(rest))
+    head = rest[:cut]
+    return [( d, tuple(int(x) for x in dims.split(",")) if dims else () )
+            for d, dims in _SHAPE_RE.findall(head)]
+
+
+def _args_of(rest: str) -> List[str]:
+    m = _OPCODE_RE.match(rest)
+    if not m:
+        return []
+    start = rest.index(m.group(1) + "(") + len(m.group(1)) + 1
+    depth, i = 1, start
+    while i < len(rest) and depth:
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+        i += 1
+    return _OPERAND_RE.findall(rest[start:i - 1])
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = ""
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        header = None
+        if not line.startswith(" ") and line.endswith("{") and "->" in line:
+            header = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+        if header:
+            cur = Computation(header.group(2))
+            comps[cur.name] = cur
+            if header.group(1):
+                entry = cur.name
+            continue
+        if cur is None or line.strip() == "}":
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        out_shapes = _out_shapes_of(rest)
+        if not out_shapes and "parameter(" not in rest:
+            continue
+        opm = _OPCODE_RE.match(rest)
+        opcode = opm.group(1) if opm else (
+            "parameter" if "parameter(" in rest else "")
+        cm = re.search(r"constant\((\d+)\)", rest)
+        if cm:
+            cur.max_constant = max(cur.max_constant, int(cm.group(1)))
+        cur.shapes[name] = out_shapes
+        if opcode in ("", "parameter", "constant"):
+            continue
+        op = Op(name, opcode, out_shapes, _args_of(rest), rest)
+        if opcode == "dot":
+            op.flops = 0.0  # filled after shapes table is complete
+        for coll in COLLECTIVES:
+            if opcode.startswith(coll):
+                op.collective = coll
+        if opcode == "while":
+            bm = re.search(r"body=%?([\w.\-]+)", rest)
+            cm2 = re.search(r"condition=%?([\w.\-]+)", rest)
+            if bm and cm2:
+                op.called = [bm.group(1), cm2.group(1)]
+            # XLA annotates known trip counts in backend_config — exact.
+            tm = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', rest)
+            if tm:
+                op.trip_count = int(tm.group(1))
+        elif opcode in ("fusion", "call", "conditional", "custom-call"):
+            for cm3 in re.finditer(r"(?:calls|to_apply|body|branch_computations=\{)"
+                                   r"=?%?([\w.\-]+)", rest):
+                op.called.append(cm3.group(1))
+        cur.ops.append(op)
+    # second pass: dot/conv flops now that operand shapes are known
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "dot":
+                op.flops = _dot_flops(op, comp)
+            elif op.opcode == "convolution":
+                op.flops = _conv_flops(op, comp)
+    return comps, entry
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_n = sum(_prod(s) for _, s in op.out_shapes)
+    lhs = comp.shapes.get(op.operands[0], []) if op.operands else []
+    if not lhs:
+        return 0.0
+    lhs_shape = lhs[0][1]
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    k = 1
+    if m and m.group(1):
+        for i in m.group(1).split(","):
+            idx = int(i)
+            if idx < len(lhs_shape):
+                k *= lhs_shape[idx]
+    return 2.0 * out_n * k
+
+
+def _conv_flops(op: Op, comp: Computation) -> float:
+    out_n = sum(_prod(s) for _, s in op.out_shapes)
+    if len(op.operands) < 2:
+        return 0.0
+    ker = comp.shapes.get(op.operands[1], [])
+    if not ker:
+        return 0.0
+    ker_n = _prod(ker[0][1])
+    out_shape = op.out_shapes[0][1]
+    oc = out_shape[-1] if out_shape else 1
+    return 2.0 * out_n * max(1, ker_n // max(1, oc))
+
+
+def compute_multipliers(comps: Dict[str, Computation], entry: str) -> Dict[str, float]:
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    for _ in range(64):
+        changed = False
+        for cname, cmult in list(mult.items()):
+            comp = comps.get(cname)
+            if comp is None or cmult <= 0:
+                continue
+            for op in comp.ops:
+                if not op.called:
+                    continue
+                if op.opcode == "while":
+                    body, cond = op.called
+                    trips = op.trip_count if op.trip_count else (
+                        max(1, comps[cond].max_constant) if cond in comps else 1)
+                    subs = ((body, trips), (cond, trips + 1))
+                else:
+                    subs = tuple((s, 1) for s in op.called)
+                for sub, k in subs:
+                    new = cmult * k
+                    if mult[sub] < new:
+                        mult[sub] = new
+                        changed = True
+        if not changed:
+            break
+    return dict(mult)
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_cost_bytes: float = 0.0
+    collective_count: int = 0
+    flops_unscaled: float = 0.0
+    top_collectives: List = field(default_factory=list)
+
+    def to_dict(self):
+        return {"flops": self.flops, "traffic_bytes": self.traffic_bytes,
+                "collective_bytes": dict(self.collective_bytes),
+                "collective_cost_bytes": self.collective_cost_bytes,
+                "collective_count": self.collective_count,
+                "flops_unscaled": self.flops_unscaled,
+                "top_collectives": self.top_collectives[:20]}
+
+
+_COLL_FACTOR = {"all-gather": 1.0, "reduce-scatter": 1.0, "all-reduce": 2.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+_NO_TRAFFIC = {"tuple", "get-tuple-element", "parameter", "bitcast",
+               "constant", "while", "after-all", "partition-id", "replica-id"}
+
+
+def analyze(text: str) -> HloStats:
+    comps, entry = parse_module(text)
+    if not entry and comps:
+        entry = max(comps, key=lambda c: len(comps[c].ops))
+    mult = compute_multipliers(comps, entry)
+    st = HloStats()
+    colls = []
+    # computations reached through fusions contribute flops but their
+    # interior ops are not HBM traffic (fused); track which are fusion-only
+    fusion_called = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "fusion":
+                fusion_called.update(op.called)
+    for cname, comp in comps.items():
+        k = mult.get(cname, 0.0)
+        inside_fusion = cname in fusion_called
+        for op in comp.ops:
+            st.flops_unscaled += op.flops
+            if k <= 0:
+                continue
+            st.flops += op.flops * k
+            if op.collective:
+                b = max(op.out_bytes, comp.operand_bytes(op))
+                st.collective_bytes[op.collective] = \
+                    st.collective_bytes.get(op.collective, 0.0) + b * k
+                st.collective_cost_bytes += b * k * _COLL_FACTOR[op.collective]
+                st.collective_count += int(k)
+                colls.append((b * k, op.collective, op.name, int(k)))
+            if not inside_fusion and op.opcode not in _NO_TRAFFIC:
+                st.traffic_bytes += (op.out_bytes + comp.operand_bytes(op)) * k
+    colls.sort(reverse=True)
+    st.top_collectives = [{"bytes_total": b, "kind": kd, "op": nm, "times": t}
+                          for b, kd, nm, t in colls[:20]]
+    return st

@@ -1,0 +1,157 @@
+"""ShapeDtypeStruct stand-ins for every model input of every cell.
+
+``input_specs(arch, shape_name, multi_pod)`` returns (kwargs, in_shardings)
+for the step function of that cell — no device allocation, weak-type-correct,
+shardable. Used by launch/dryrun.py and benchmarks/roofline.py.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import pshard
+from repro.config import ModelConfig, ShapeConfig, shapes_for
+from repro.configs import get_config
+from repro.models import build_model
+from repro.models.encdec import src_len
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_axes(global_batch: int, mesh, multi_pod: bool):
+    """Which mesh axes the batch dim shards over (per-pod batch when
+    multi_pod: the leading stack dim takes 'pod')."""
+    data = mesh.shape.get("data", 1)
+    return ("data",) if global_batch % data == 0 and global_batch >= data else ()
+
+
+def _ns(mesh, *spec):
+    with pshard.use_mesh(mesh):
+        return NamedSharding(mesh, pshard.resolve_spec(*spec))
+
+
+def _stack(tree, p: int):
+    return jax.tree.map(lambda s: SDS((p,) + tuple(s.shape), s.dtype), tree)
+
+
+def _stack_shardings(shardings, mesh):
+    def one(ns):
+        spec = ns.spec if ns is not None else P()
+        return NamedSharding(mesh, P("pod", *spec))
+    return jax.tree.map(one, shardings,
+                        is_leaf=lambda x: isinstance(x, NamedSharding))
+
+
+def param_specs(model, cfg: ModelConfig, mesh):
+    """Abstract params + their NamedShardings under ``mesh``."""
+    with pshard.use_mesh(mesh):
+        params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        shardings = pshard.param_shardings(params_sds, model.param_rules())
+    return params_sds, shardings
+
+
+def _batch_axis(B: int, mesh):
+    """Largest prefix of the configured batch axes that divides B."""
+    axes = tuple(a for a in pshard.get_batch_axes()
+                 if a in mesh.axis_names and a != "pod")
+    while axes:
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if B % n == 0 and B >= n:
+            break
+        axes = axes[:-1]
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                per_pod_batch: Optional[int] = None):
+    """Train/prefill batch SDS + shardings (without any pod stacking)."""
+    B = per_pod_batch or shape.global_batch
+    S = shape.seq_len
+    b_ax = _batch_axis(B, mesh)
+    toks = SDS((B, S), jnp.int32)
+    batch = {"tokens": toks, "targets": toks}
+    sh = {"tokens": _ns(mesh, b_ax, None), "targets": _ns(mesh, b_ax, None)}
+    if cfg.family == "encdec":
+        batch["frames"] = SDS((B, src_len(S), cfg.d_model), jnp.float32)
+        sh["frames"] = _ns(mesh, b_ax, None, None)
+    return batch, sh
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, model, *,
+                 per_pod_batch: Optional[int] = None):
+    B = per_pod_batch or shape.global_batch
+    b_ax = "data" if B % mesh.shape.get("data", 1) == 0 and B >= mesh.shape.get("data", 1) else None
+    batch = {"token": SDS((B,), jnp.int32), "pos": SDS((), jnp.int32)}
+    bsh = {"token": _ns(mesh, b_ax), "pos": _ns(mesh)}
+    with pshard.use_mesh(mesh):
+        cache_sds = jax.eval_shape(lambda: model.init_cache(B, shape.seq_len))
+        cache_spec = model.cache_spec(B)
+        csh = jax.tree.map(
+            lambda s, sds: NamedSharding(mesh, pshard.size_filter(s, sds.shape)),
+            cache_spec, cache_sds, is_leaf=lambda x: isinstance(x, P))
+    return batch, bsh, cache_sds, csh
+
+
+def input_specs(arch: str, shape_name: str = "train_4k", *,
+                multi_pod: bool = False, mesh=None,
+                sharding: Optional[str] = None) -> Dict:
+    """Everything dryrun needs for one cell: kwargs + in_shardings for the
+    step function appropriate to the cell kind."""
+    import dataclasses
+    from repro.launch.mesh import make_production_mesh
+    cfg = get_config(arch)
+    if sharding:
+        cfg = dataclasses.replace(cfg, sharding_mode=sharding)
+    pshard.set_batch_axes(("pod", "data", "model")
+                          if cfg.sharding_mode in ("fsdp", "dp")
+                          else ("pod", "data"))
+    shape = {s.name: s for s in shapes_for(cfg)}[shape_name]
+    if shape.kind != "train" and cfg.fsdp and sharding is None:
+        # serve-time sharding != train-time sharding: FSDP param all-gathers
+        # cost ~params bytes PER TOKEN in decode; drop the data-axis shard
+        # whenever the TP-sharded params fit HBM (<= ~12 GB/chip bf16)
+        if cfg.n_params() * 2 / 16 <= 12e9:
+            cfg = dataclasses.replace(cfg, fsdp=False)
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+    n_pods = mesh.shape.get("pod", 1)
+    params_sds, psh = param_specs(model, cfg, mesh)
+
+    out = {"cfg": cfg, "shape": shape, "mesh": mesh, "model": model,
+           "kind": shape.kind, "multi_pod": multi_pod}
+    if shape.kind in ("train", "prefill"):
+        per_pod = shape.global_batch // n_pods if multi_pod else None
+        if multi_pod and shape.global_batch % n_pods:
+            per_pod = max(1, shape.global_batch // n_pods)
+        batch_sds, bsh = batch_specs(cfg, shape, mesh, per_pod_batch=per_pod)
+        if multi_pod:
+            params_sds = _stack(params_sds, n_pods)
+            psh = _stack_shardings(psh, mesh)
+            batch_sds = _stack(batch_sds, n_pods)
+            bsh = _stack_shardings(bsh, mesh)
+        out.update(kwargs={"params": params_sds, "batch": batch_sds},
+                   in_shardings=(psh, bsh))
+    else:  # decode
+        per_pod = None
+        if multi_pod:
+            per_pod = max(1, shape.global_batch // n_pods)
+        batch_sds, bsh, cache_sds, csh = decode_specs(
+            cfg, shape, mesh, model, per_pod_batch=per_pod)
+        if multi_pod:
+            params_sds = _stack(params_sds, n_pods)
+            psh = _stack_shardings(psh, mesh)
+            batch_sds = _stack(batch_sds, n_pods)
+            bsh = _stack_shardings(bsh, mesh)
+            cache_sds = _stack(cache_sds, n_pods)
+            csh = _stack_shardings(csh, mesh)
+        out.update(kwargs={"params": params_sds, "batch": batch_sds,
+                           "cache": cache_sds},
+                   in_shardings=(psh, bsh, csh))
+    return out

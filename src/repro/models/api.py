@@ -1,0 +1,84 @@
+"""Uniform model API over all families.
+
+``build_model(cfg)`` returns a ``Model`` whose methods are pure functions of
+(params, batch) suitable for jit/pjit:
+
+  init(rng)                      -> params
+  loss(params, batch)            -> (scalar loss, metrics dict)
+  prefill(params, batch)         -> (logits, cache)
+  init_cache(batch, seq_len)     -> cache pytree
+  decode_step(params, batch, cache) -> (logits [B,V], cache)
+  param_rules()                  -> path-regex sharding rules
+  cache_spec(batch)              -> pytree of PartitionSpec for the cache
+
+Batches:
+  LM train:   {'tokens' [B,S] i32, 'targets' [B,S] i32}
+  encdec adds 'frames' [B,S/4,D] f32 (audio frontend stub).
+  decode:     {'token' [B] i32, 'pos' scalar i32}
+  CNN:        {'image' [B,32,32,3] f32, 'label' [B] i32}
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import cnn, encdec, rglru, rwkv6, transformer
+from repro import pshard
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, mod, *, kind: str):
+        self.cfg = cfg
+        self._m = mod
+        self.kind = kind  # 'decoder' | 'encdec' | 'ssm' | 'hybrid' | 'cnn'
+
+    # -- parameters --------------------------------------------------------- #
+    def init(self, rng):
+        return self._m.init_params(rng, self.cfg)
+
+    def param_rules(self):
+        return self._m.param_rules(self.cfg)
+
+    # -- training ----------------------------------------------------------- #
+    def loss(self, params, batch):
+        return self._m.loss_fn(params, batch, self.cfg)
+
+    # -- serving ------------------------------------------------------------ #
+    def init_cache(self, batch: int, seq_len: int):
+        if self.kind == "cnn":
+            raise ValueError("cnn has no decode path")
+        if self.kind == "ssm":
+            return rwkv6.init_state(self.cfg, batch)
+        return self._m.init_cache(self.cfg, batch, seq_len)
+
+    def cache_spec(self, batch: int):
+        if self.kind == "ssm":
+            return rwkv6.state_spec(self.cfg, batch)
+        return self._m.cache_spec(self.cfg, batch)
+
+    def prefill(self, params, batch):
+        if self.kind == "encdec":
+            return encdec.prefill(params, batch, self.cfg)
+        return self._m.prefill(params, batch["tokens"], self.cfg)
+
+    def decode_step(self, params, batch, cache):
+        return self._m.decode_step(params, batch["token"], batch["pos"],
+                                   cache, self.cfg)
+
+
+_FAMILY_MOD = {
+    "dense": (transformer, "decoder"),
+    "vlm": (transformer, "decoder"),
+    "moe": (transformer, "decoder"),
+    "ssm": (rwkv6, "ssm"),
+    "hybrid": (rglru, "hybrid"),
+    "encdec": (encdec, "encdec"),
+    "cnn": (cnn, "cnn"),
+}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    mod, kind = _FAMILY_MOD[cfg.family]
+    return Model(cfg, mod, kind=kind)

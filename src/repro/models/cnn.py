@@ -1,0 +1,71 @@
+"""The paper's edge workload: LeNet-style CNN (~62K params) for CIFAR-10.
+
+conv(3->6,5x5) -> maxpool -> conv(6->16,5x5) -> maxpool -> fc120 -> fc84 -> fc10
+(this is the Flower-tutorial CNN the paper's 62K figure corresponds to).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 5)
+    c1, c2 = 6, cfg.d_model  # 16 by default
+    fc1, fc2 = cfg.d_ff, 84  # 120, 84
+    flat = c2 * 5 * 5
+    pd = L.dtype_of(cfg.param_dtype)
+    return {
+        "conv1": {"w": L.dense_init(ks[0], (5, 5, 3, c1), 75, pd),
+                  "b": jnp.zeros((c1,), pd)},
+        "conv2": {"w": L.dense_init(ks[1], (5, 5, c1, c2), 25 * c1, pd),
+                  "b": jnp.zeros((c2,), pd)},
+        "fc1": {"w": L.dense_init(ks[2], (flat, fc1), flat, pd),
+                "b": jnp.zeros((fc1,), pd)},
+        "fc2": {"w": L.dense_init(ks[3], (fc1, fc2), fc1, pd),
+                "b": jnp.zeros((fc2,), pd)},
+        "out": {"w": L.dense_init(ks[4], (fc2, cfg.vocab_size), fc2, pd),
+                "b": jnp.zeros((cfg.vocab_size,), pd)},
+    }
+
+
+def _conv(x, p):
+    y = lax.conv_general_dilated(
+        x, p["w"].astype(x.dtype), window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"].astype(x.dtype)
+
+
+def _pool(x):
+    return lax.reduce_window(x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
+                             "VALID")
+
+
+def forward(params, images, cfg: ModelConfig):
+    """images: [B, 32, 32, 3] float -> logits [B, n_classes]."""
+    x = images.astype(L.dtype_of(cfg.compute_dtype))
+    x = _pool(jax.nn.relu(_conv(x, params["conv1"])))
+    x = _pool(jax.nn.relu(_conv(x, params["conv2"])))
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"].astype(x.dtype) + params["fc1"]["b"].astype(x.dtype))
+    x = jax.nn.relu(x @ params["fc2"]["w"].astype(x.dtype) + params["fc2"]["b"].astype(x.dtype))
+    return x @ params["out"]["w"].astype(x.dtype) + params["out"]["b"].astype(x.dtype)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits = forward(params, batch["image"], cfg).astype(jnp.float32)
+    labels = batch["label"]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(lse - gold)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"loss": loss, "ce": loss, "accuracy": acc,
+                  "aux": jnp.float32(0.0)}
+
+
+def param_rules(cfg: ModelConfig):
+    return [(r".*", (None, None, None, None))]

@@ -1,0 +1,324 @@
+"""Shared neural-net layers (pure JAX, pytree params).
+
+Conventions:
+  - params are nested dicts of jnp arrays; leaf names drive sharding rules.
+  - activations: [batch, seq, d_model]; attention heads [B, S, H, hd].
+  - norms/softmax/CE computed in float32 regardless of compute dtype.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro import pshard
+from repro.config import ModelConfig
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def dense_init(key, shape, in_axis_size, dtype):
+    scale = 1.0 / math.sqrt(max(1, in_axis_size))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Norms
+# --------------------------------------------------------------------------- #
+
+def rms_norm(x, scale, eps=1e-6, zero_centered=False):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps)
+    s = scale.astype(jnp.float32)
+    if zero_centered:
+        s = 1.0 + s
+    return (y * s).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# RoPE
+# --------------------------------------------------------------------------- #
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, hd]; positions: [..., S] (broadcastable)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    ang = ang[..., None, :]  # broadcast over heads: [..., S, 1, hd/2]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Attention (chunked online-softmax for train/prefill, gather for decode)
+# --------------------------------------------------------------------------- #
+
+ATTN_CHUNK = 1024  # KV-chunk size: keeps scores O(S * chunk) not O(S^2)
+
+
+def _gqa_scores(q, k):
+    """q: [B,S,KV,G,hd]; k: [B,T,KV,hd] -> scores [B,KV,G,S,T] (f32)."""
+    return jnp.einsum("bskgh,btkh->bkgst", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _gqa_out(p, v):
+    """p: [B,KV,G,S,T]; v: [B,T,KV,hd] -> [B,KV,G,S,hd]."""
+    return jnp.einsum("bkgst,btkh->bkgsh", p.astype(v.dtype), v)
+
+
+def chunked_attention(q, k, v, *, q_offset, window: Optional[int],
+                      causal: bool = True):
+    """Online-softmax attention over KV chunks (flash-style, pure jnp).
+
+    q: [B, S, H, hd] grouped into KV groups internally.
+    k, v: [B, T, KV, hd]. q_offset: absolute position of q[0] minus that of
+    k[0] (0 for self-attention over the same sequence).
+    window: sliding-window size (None = full). causal=False for encoders.
+    """
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    scale = 1.0 / math.sqrt(hd)
+    qg = qg * scale
+    n_chunks = max(1, (T + ATTN_CHUNK - 1) // ATTN_CHUNK)
+    pad_T = n_chunks * ATTN_CHUNK
+    if pad_T != T:
+        pad = [(0, 0), (0, pad_T - T), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    kc = k.reshape(B, n_chunks, ATTN_CHUNK, KV, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, ATTN_CHUNK, KV, hd).transpose(1, 0, 2, 3, 4)
+
+    q_pos = q_offset + jnp.arange(S)  # absolute positions of queries
+
+    def body(carry, xs):
+        m, l, acc, c_idx = carry
+        k_blk, v_blk = xs  # [B, C, KV, hd]
+        s = _gqa_scores(qg, k_blk)  # [B,KV,G,S,C]
+        kv_pos = c_idx * ATTN_CHUNK + jnp.arange(ATTN_CHUNK)
+        valid = kv_pos[None, :] < T
+        if causal:
+            valid = valid & (kv_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            valid = valid & (kv_pos[None, :] > q_pos[:, None] - window)
+        # additive [S, C] f32 mask: stays tiny if XLA hoists it out of the
+        # layer loop (a broadcasted pred select materializes [B,KV,G,S,C])
+        s = s + jnp.where(valid, 0.0, -1e30)[None, None, None]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None].astype(acc.dtype) + _gqa_out(p, v_blk)
+        return (m_new, l_new, acc_new, c_idx + 1), None
+
+    m0 = jnp.full((B, KV, G, S), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, S), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, S, hd), jnp.float32)
+    (m, l, acc, _), _ = lax.scan(body, (m0, l0, a0, jnp.int32(0)), (kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd)  # [B,S,KV,G,hd]->[B,S,H,hd]
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, *, n_valid, rolling: bool = False):
+    """Single-token attention against a cache.
+
+    q: [B, 1, H, hd]; caches: [B, W, KV, hd]; n_valid: number of valid cache
+    slots (scalar). With ``rolling`` caches, order in the buffer is arbitrary
+    (positions already rotary-encoded at write time), so no causal mask beyond
+    slot validity is needed.
+    """
+    B, _, H, hd = q.shape
+    W, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qg = q.reshape(B, 1, KV, G, hd) * (1.0 / math.sqrt(hd))
+    s = _gqa_scores(qg, k_cache)  # [B,KV,G,1,W]
+    valid = jnp.arange(W) < n_valid
+    s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = _gqa_out(p, v_cache)  # [B,KV,G,1,hd]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, 1, H, hd)
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Attention block (projections + rope + norm)
+# --------------------------------------------------------------------------- #
+
+def init_attention(key, cfg: ModelConfig):
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    pd = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (d, cfg.n_heads, hd), d, pd),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads, hd), d, pd),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads, hd), d, pd),
+        "wo": dense_init(ks[3], (cfg.n_heads, hd, d), cfg.n_heads * hd, pd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads, hd), pd)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads, hd), pd)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads, hd), pd)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), pd)
+        p["k_norm"] = jnp.ones((hd,), pd)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = pshard.constrain(q, pshard.BATCH, None, "model", None)
+    k = pshard.constrain(k, pshard.BATCH, None,
+                         "model" if cfg.n_kv_heads >= 16 else None, None)
+    return q, k, v
+
+
+def attention_block(p, x, cfg: ModelConfig, *, positions, causal=True):
+    """Full-sequence self attention (train / prefill). Returns (out, (k, v))."""
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    out = chunked_attention(q, k, v, q_offset=0, window=cfg.attn_window,
+                            causal=causal)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return pshard.constrain(out, pshard.BATCH, None, None), (k, v)
+
+
+def attention_decode(p, x, cache_k, cache_v, pos, cfg: ModelConfig):
+    """One-token decode. x: [B, 1, D]. cache: [B, W, KV, hd]; pos: scalar."""
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    W = cache_k.shape[1]
+    rolling = cfg.attn_window is not None and W <= cfg.attn_window
+    slot = jnp.where(rolling, pos % W, jnp.minimum(pos, W - 1))
+    cache_k = lax.dynamic_update_slice(cache_k, k, (0, slot, 0, 0))
+    cache_v = lax.dynamic_update_slice(cache_v, v, (0, slot, 0, 0))
+    n_valid = jnp.minimum(pos + 1, W)
+    out = decode_attention(q, cache_k, cache_v, n_valid=n_valid)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, cache_k, cache_v
+
+
+def cache_width(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.attn_window is not None:
+        return min(cfg.attn_window, seq_len)
+    return seq_len
+
+
+# --------------------------------------------------------------------------- #
+# MLP
+# --------------------------------------------------------------------------- #
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    pd = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    p = {"wi": dense_init(ks[0], (d, f), d, pd),
+         "wo": dense_init(ks[1], (f, d), f, pd)}
+    if cfg.gated_mlp:
+        p["wg"] = dense_init(ks[2], (d, f), d, pd)
+    return p
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+            "relu": jax.nn.relu}[name]
+
+
+def mlp_block(p, x, cfg: ModelConfig):
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(x.dtype))
+    h = pshard.constrain(h, pshard.BATCH, None, "model")
+    if cfg.gated_mlp:
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(x.dtype))
+        g = pshard.constrain(g, pshard.BATCH, None, "model")
+        h = _act(cfg.mlp_act)(g) * h
+    else:
+        h = _act(cfg.mlp_act)(h)
+    out = jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(x.dtype))
+    return pshard.constrain(out, pshard.BATCH, None, None)
+
+
+# --------------------------------------------------------------------------- #
+# Embedding / logits
+# --------------------------------------------------------------------------- #
+
+def init_embedding(key, cfg: ModelConfig):
+    pd = dtype_of(cfg.param_dtype)
+    V = cfg.padded_vocab()
+    p = {"embedding": (jax.random.normal(key, (V, cfg.d_model)) * 0.02).astype(pd)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(jax.random.fold_in(key, 1),
+                                  (cfg.d_model, V), cfg.d_model, pd)
+    return p
+
+
+def embed(p, tokens, cfg: ModelConfig):
+    x = jnp.take(p["embedding"], tokens, axis=0).astype(dtype_of(cfg.compute_dtype))
+    if cfg.arch_id.startswith(("gemma", "recurrentgemma")):
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return pshard.constrain(x, pshard.BATCH, None, None)
+
+
+def logits_out(p, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        w = p["embedding"].astype(x.dtype).T
+    else:
+        w = p["unembed"].astype(x.dtype)
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    logits = pshard.constrain(logits, pshard.BATCH, None, "model")
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits
+
+
+def cross_entropy(logits, targets, vocab_size: int, mask=None):
+    """Next-token CE in f32 with padded-vocab masking. targets: [B,S]."""
+    lf = logits.astype(jnp.float32)
+    V = lf.shape[-1]
+    if V > vocab_size:
+        neg = jnp.where(jnp.arange(V) >= vocab_size, -1e30, 0.0)
+        lf = lf + neg
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

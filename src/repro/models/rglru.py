@@ -1,0 +1,306 @@
+"""RecurrentGemma / Griffin (arXiv:2402.19427): RG-LRU recurrence + local MQA
+attention in a repeating (rec, rec, attn) pattern.
+
+Recurrent block: gate branch GeLU(x Wg) * RG_LRU(conv1d(x Wi)), then Wo.
+RG-LRU:  r_t = sigmoid(x W_a + b_a);  i_t = sigmoid(x W_x + b_x)
+         a_t = exp(-c * softplus(lam) * r_t),  c = 8
+         h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+Diagonal recurrence -> lax.associative_scan (train/prefill), O(1) decode state.
+Local attention window (2048) bounds the KV cache => long_500k runs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro import pshard
+from repro.config import ModelConfig
+from repro.models import layers as L
+
+CONV_WIDTH = 4
+LRU_C = 8.0
+
+
+def _n_groups_tail(cfg: ModelConfig):
+    pat = cfg.block_pattern or ("rec", "rec", "attn")
+    assert pat == ("rec", "rec", "attn"), "only the griffin 2:1 pattern is wired"
+    return cfg.n_layers // 3, cfg.n_layers % 3  # tail layers are 'rec'
+
+
+def init_rec_block(key, cfg: ModelConfig):
+    d = cfg.d_model
+    pd = L.dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "norm": jnp.ones((d,), pd),
+        "wg": L.dense_init(ks[0], (d, d), d, pd),
+        "wi": L.dense_init(ks[1], (d, d), d, pd),
+        "wo": L.dense_init(ks[2], (d, d), d, pd),
+        "conv_w": L.dense_init(ks[3], (CONV_WIDTH, d), CONV_WIDTH, pd),
+        "lru_wa": L.dense_init(ks[4], (d, d), d, pd),
+        "lru_wx": L.dense_init(ks[5], (d, d), d, pd),
+        "lru_ba": jnp.zeros((d,), pd),
+        "lru_bx": jnp.zeros((d,), pd),
+        "lru_lam": (jax.random.uniform(jax.random.fold_in(key, 7), (d,),
+                                       minval=0.9, maxval=1.1)).astype(jnp.float32),
+        "mlp_norm": jnp.ones((d,), pd),
+    }
+
+
+def init_group(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 6)
+    g = {
+        "rec1": init_rec_block(ks[0], cfg),
+        "rec1_mlp": L.init_mlp(ks[1], cfg),
+        "rec2": init_rec_block(ks[2], cfg),
+        "rec2_mlp": L.init_mlp(ks[3], cfg),
+        "attn_norm": jnp.ones((cfg.d_model,), L.dtype_of(cfg.param_dtype)),
+        "attn": L.init_attention(ks[4], cfg),
+        "attn_mlp_norm": jnp.ones((cfg.d_model,), L.dtype_of(cfg.param_dtype)),
+        "attn_mlp": L.init_mlp(ks[5], cfg),
+    }
+    return g
+
+
+def init_params(key, cfg: ModelConfig):
+    n_groups, tail = _n_groups_tail(cfg)
+    k_embed, k_groups, k_tail = jax.random.split(key, 3)
+    gkeys = jax.random.split(k_groups, n_groups)
+    params = {
+        "embed": L.init_embedding(k_embed, cfg),
+        "groups": jax.vmap(lambda k: init_group(k, cfg))(gkeys),
+        "final_norm": jnp.ones((cfg.d_model,), L.dtype_of(cfg.param_dtype)),
+    }
+    if tail:
+        tkeys = jax.random.split(k_tail, tail)
+        params["tail"] = jax.vmap(lambda k: {
+            "rec": init_rec_block(jax.random.fold_in(k, 0), cfg),
+            "mlp": L.init_mlp(jax.random.fold_in(k, 1), cfg)})(tkeys)
+    return params
+
+
+# --------------------------------------------------------------------------- #
+# RG-LRU + conv
+# --------------------------------------------------------------------------- #
+
+def _conv1d(x, w, tail):
+    """Depthwise causal conv, width CONV_WIDTH. x [B,S,D]; tail [B,W-1,D]."""
+    xx = jnp.concatenate([tail, x], axis=1)
+    out = sum(xx[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(CONV_WIDTH))
+    return out, xx[:, -(CONV_WIDTH - 1):]
+
+
+def rg_lru(x, r_gate, i_gate, lam, h0):
+    """x,r,i: [B,S,D] (f32); h0 [B,D]. Returns (y [B,S,D], hS [B,D])."""
+    log_a = -LRU_C * jax.nn.softplus(lam) * r_gate  # [B,S,D], <= 0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, 1.0)) * (i_gate * x)
+    # prepend h0 as an element with a=identity-absorbing: fold h0 into b_0
+    b0 = b[:, 0] + a[:, 0] * h0
+    b = jnp.concatenate([b0[:, None], b[:, 1:]], axis=1)
+    a_scan = jnp.concatenate([jnp.ones_like(a[:, :1]), a[:, 1:]], axis=1)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = lax.associative_scan(combine, (a_scan, b), axis=1)
+    return h, h[:, -1]
+
+
+def rec_block(p, x, cfg: ModelConfig, st):
+    """st: dict(conv [B,3,D], h [B,D]). Returns (out, new st)."""
+    xn = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", xn, p["wg"].astype(x.dtype)))
+    z = jnp.einsum("bsd,de->bse", xn, p["wi"].astype(x.dtype))
+    z = pshard.constrain(z, pshard.BATCH, None, "model")
+    z, conv_tail = _conv1d(z, p["conv_w"], st["conv"])
+    zf = z.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xn, p["lru_wa"].astype(x.dtype))
+                       .astype(jnp.float32) + p["lru_ba"].astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xn, p["lru_wx"].astype(x.dtype))
+                       .astype(jnp.float32) + p["lru_bx"].astype(jnp.float32))
+    h, h_last = rg_lru(zf, r, i, p["lru_lam"], st["h"])
+    y = (gate * h.astype(gate.dtype))
+    out = jnp.einsum("bsd,de->bse", y, p["wo"].astype(x.dtype))
+    out = pshard.constrain(out, pshard.BATCH, None, None)
+    return out, {"conv": conv_tail, "h": h_last}
+
+
+def _rec_sub(cfg, x, p_rec, p_mlp, norm_mlp, st):
+    h, st = rec_block(p_rec, x, cfg, st)
+    x = x + h
+    x = x + L.mlp_block(p_mlp, L.rms_norm(x, norm_mlp, cfg.norm_eps), cfg)
+    return x, st
+
+
+def _group_fwd(cfg, x, gp, positions, st, collect_kv):
+    x, st1 = _rec_sub(cfg, x, gp["rec1"], gp["rec1_mlp"],
+                      gp["rec1"]["mlp_norm"], st["rec1"])
+    x, st2 = _rec_sub(cfg, x, gp["rec2"], gp["rec2_mlp"],
+                      gp["rec2"]["mlp_norm"], st["rec2"])
+    h, kv = L.attention_block(gp["attn"],
+                              L.rms_norm(x, gp["attn_norm"], cfg.norm_eps),
+                              cfg, positions=positions)
+    x = x + h
+    x = x + L.mlp_block(gp["attn_mlp"],
+                        L.rms_norm(x, gp["attn_mlp_norm"], cfg.norm_eps), cfg)
+    return x, {"rec1": st1, "rec2": st2}, (kv if collect_kv else None)
+
+
+# --------------------------------------------------------------------------- #
+# States / caches
+# --------------------------------------------------------------------------- #
+
+def _zero_rec_state(cfg, batch, n, dt):
+    return {"conv": jnp.zeros((n, batch, CONV_WIDTH - 1, cfg.d_model), dt),
+            "h": jnp.zeros((n, batch, cfg.d_model), jnp.float32)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    n_groups, tail = _n_groups_tail(cfg)
+    dt = L.dtype_of(cfg.compute_dtype)
+    W = L.cache_width(cfg, seq_len)
+    hd = cfg.resolved_head_dim
+    cache = {
+        "rec1": _zero_rec_state(cfg, batch, n_groups, dt),
+        "rec2": _zero_rec_state(cfg, batch, n_groups, dt),
+        "k": jnp.zeros((n_groups, batch, W, cfg.n_kv_heads, hd), dt),
+        "v": jnp.zeros((n_groups, batch, W, cfg.n_kv_heads, hd), dt),
+    }
+    if tail:
+        cache["tail"] = _zero_rec_state(cfg, batch, tail, dt)
+    return cache
+
+
+def cache_spec(cfg: ModelConfig, batch: int):
+    b_ax = "data" if batch > 1 else None  # pod handled by stacking in multi-pod
+    w_ax = "data" if batch == 1 else None
+    rec = {"conv": pshard.resolve_spec(None, b_ax, None, "model"),
+           "h": pshard.resolve_spec(None, b_ax, "model")}
+    n_groups, tail = _n_groups_tail(cfg)
+    spec = {"rec1": rec, "rec2": rec,
+            "k": pshard.resolve_spec(None, b_ax, w_ax, None, None),
+            "v": pshard.resolve_spec(None, b_ax, w_ax, None, None)}
+    if tail:
+        spec["tail"] = rec
+    return spec
+
+
+# --------------------------------------------------------------------------- #
+# Forward / loss / serve
+# --------------------------------------------------------------------------- #
+
+def forward(params, tokens, cfg: ModelConfig, cache=None, *,
+            pos0=0, collect_kv=False):
+    B, S = tokens.shape
+    n_groups, tail = _n_groups_tail(cfg)
+    if cache is None:
+        cache = init_cache(cfg, B, S)
+    x = L.embed(params["embed"], tokens, cfg)
+    positions = pos0 + jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(x, xs):
+        gp, st = xs
+        x, st_new, kv = _group_fwd(cfg, x, gp, positions,
+                                   {"rec1": st["rec1"], "rec2": st["rec2"]},
+                                   collect_kv)
+        return x, (st_new, kv)
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+    st_in = {"rec1": cache["rec1"], "rec2": cache["rec2"]}
+    x, (st_out, kvs) = lax.scan(body_fn, x, (params["groups"], st_in))
+    new_cache = dict(cache)
+    new_cache["rec1"], new_cache["rec2"] = st_out["rec1"], st_out["rec2"]
+    if collect_kv:
+        k, v = kvs
+        W = L.cache_width(cfg, S)
+        if W < S:
+            k = jnp.roll(k[:, :, S - W:], shift=(S - W) % W, axis=2)
+            v = jnp.roll(v[:, :, S - W:], shift=(S - W) % W, axis=2)
+        new_cache["k"], new_cache["v"] = k, v
+    if tail:
+        def tbody(x, xs):
+            tp, st = xs
+            x, st = _rec_sub(cfg, x, tp["rec"], tp["mlp"],
+                             tp["rec"]["mlp_norm"], st)
+            return x, st
+        tbody_fn = jax.checkpoint(tbody) if cfg.remat == "full" else tbody
+        x, tail_st = lax.scan(tbody_fn, x, (params["tail"], cache["tail"]))
+        new_cache["tail"] = tail_st
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_cache
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    x, _ = forward(params, batch["tokens"], cfg)
+    logits = L.logits_out(params["embed"], x, cfg)
+    ce = L.cross_entropy(logits, batch["targets"], cfg.vocab_size,
+                         batch.get("mask"))
+    return ce, {"loss": ce, "ce": ce, "aux": jnp.float32(0.0)}
+
+
+def prefill(params, tokens, cfg: ModelConfig):
+    x, cache = forward(params, tokens, cfg, collect_kv=True)
+    return L.logits_out(params["embed"], x, cfg), cache
+
+
+def decode_step(params, token, pos, cache, cfg: ModelConfig):
+    B = token.shape[0]
+    n_groups, tail = _n_groups_tail(cfg)
+    x = L.embed(params["embed"], token[:, None], cfg)
+
+    def body(x, xs):
+        gp, st, ck, cv = xs
+        x, st1 = _rec_sub(cfg, x, gp["rec1"], gp["rec1_mlp"],
+                          gp["rec1"]["mlp_norm"], st["rec1"])
+        x, st2 = _rec_sub(cfg, x, gp["rec2"], gp["rec2_mlp"],
+                          gp["rec2"]["mlp_norm"], st["rec2"])
+        h, ck, cv = L.attention_decode(
+            gp["attn"], L.rms_norm(x, gp["attn_norm"], cfg.norm_eps),
+            ck, cv, pos, cfg)
+        x = x + h
+        x = x + L.mlp_block(gp["attn_mlp"],
+                            L.rms_norm(x, gp["attn_mlp_norm"], cfg.norm_eps), cfg)
+        return x, ({"rec1": st1, "rec2": st2}, ck, cv)
+
+    st_in = {"rec1": cache["rec1"], "rec2": cache["rec2"]}
+    x, (st_out, k_new, v_new) = lax.scan(
+        body, x, (params["groups"], st_in, cache["k"], cache["v"]))
+    new_cache = dict(cache)
+    new_cache["rec1"], new_cache["rec2"] = st_out["rec1"], st_out["rec2"]
+    new_cache["k"], new_cache["v"] = k_new, v_new
+    if tail:
+        def tbody(x, xs):
+            tp, st = xs
+            x, st = _rec_sub(cfg, x, tp["rec"], tp["mlp"],
+                             tp["rec"]["mlp_norm"], st)
+            return x, st
+        x, tail_st = lax.scan(tbody, x, (params["tail"], cache["tail"]))
+        new_cache["tail"] = tail_st
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.logits_out(params["embed"], x, cfg)[:, 0]
+    return logits, new_cache
+
+
+def param_rules(cfg: ModelConfig):
+    fsdp = "data" if cfg.fsdp else None
+    return [
+        (r"embed/embedding", ("model", None)),
+        (r"embed/unembed", (fsdp, "model")),
+        (r"attn/wq$", (None, fsdp, "model", None)),
+        (r"attn/w[kv]$", (None, fsdp, None, None)),  # MQA: replicate kv
+        (r"attn/wo$", (None, "model", None, fsdp)),
+        (r"(wg|wi)$", (None, fsdp, "model")),
+        (r"wo$", (None, "model", fsdp)),
+        (r"lru_w[ax]", (None, fsdp, "model")),
+        (r"conv_w", (None, None, "model")),
+        (r"lru_(lam|ba|bx)", (None, "model")),
+        (r".*", (None, None, None, None)),
+    ]

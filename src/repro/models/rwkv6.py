@@ -1,0 +1,283 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free LM with data-dependent
+per-channel decay and matrix-valued per-head state.
+
+Time-mix: ddlerp token-shift (low-rank data-dependent interpolation of x_t and
+x_{t-1} per projection), r/k/v/g projections, decay w_t from a low-rank MLP,
+bonus u, per-head WKV recurrence:
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (S: [hd, hd] per head)
+    y_t = (S_{t-1} + diag(u) k_t v_t^T)^T r_t
+
+Training/prefill uses a chunked formulation (see kernels/rwkv6.py for the
+Pallas TPU kernel; this module uses the jnp chunked path which is the kernel's
+oracle and the CPU fallback). Decode keeps O(1) state => long_500k runs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro import pshard
+from repro.config import ModelConfig
+from repro.models import layers as L
+
+MIX_NAMES = ("r", "k", "v", "w", "g")
+LORA_DIM = 32
+DECAY_LORA = 64
+CHUNK = 32  # wkv chunk length (f32-safe for in-chunk decay products)
+
+
+def init_layer(key, cfg: ModelConfig):
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    nh = d // hs
+    pd = L.dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 16)
+    p = {
+        "ln1": jnp.ones((d,), pd),
+        "ln2": jnp.ones((d,), pd),
+        "mix_mu": (jax.random.uniform(ks[0], (5, d)) * 0.5).astype(pd),
+        "mix_w1": L.dense_init(ks[1], (d, 5 * LORA_DIM), d, pd),
+        "mix_w2": L.dense_init(ks[2], (5, LORA_DIM, d), LORA_DIM, pd),
+        "wr": L.dense_init(ks[3], (d, d), d, pd),
+        "wk": L.dense_init(ks[4], (d, d), d, pd),
+        "wv": L.dense_init(ks[5], (d, d), d, pd),
+        "wg": L.dense_init(ks[6], (d, d), d, pd),
+        "wo": L.dense_init(ks[7], (d, d), d, pd),
+        "decay_base": (jax.random.uniform(ks[8], (d,)) * -6.0 - 1.0).astype(jnp.float32),
+        "decay_w1": L.dense_init(ks[9], (d, DECAY_LORA), d, pd),
+        "decay_w2": L.dense_init(ks[10], (DECAY_LORA, d), DECAY_LORA, pd),
+        "bonus_u": (jax.random.uniform(ks[11], (nh, hs)) * 0.5).astype(jnp.float32),
+        "gn_scale": jnp.ones((d,), pd),
+        # channel mix
+        "cmix_mu": (jax.random.uniform(ks[12], (2, d)) * 0.5).astype(pd),
+        "cm_wr": L.dense_init(ks[13], (d, d), d, pd),
+        "cm_wk": L.dense_init(ks[14], (d, cfg.d_ff), d, pd),
+        "cm_wv": L.dense_init(ks[15], (cfg.d_ff, d), cfg.d_ff, pd),
+    }
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    k_embed, k_layers = jax.random.split(key)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    return {
+        "embed": L.init_embedding(k_embed, cfg),
+        "layers": stacked,
+        "final_norm": jnp.ones((cfg.d_model,), L.dtype_of(cfg.param_dtype)),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# WKV chunked recurrence (pure jnp; oracle for kernels/rwkv6.py)
+# --------------------------------------------------------------------------- #
+
+def wkv_chunked(r, k, v, w, u, state):
+    """r,k,v: [B, T, H, hs]; w: [B, T, H, hs] decay in (0,1); u: [H, hs].
+
+    state: [B, H, hs, hs] (key-dim x value-dim). Returns (y [B,T,H,hs], state').
+    T must be a multiple of CHUNK (caller pads).
+    """
+    B, T, H, hs = r.shape
+    n = T // CHUNK
+    rc = r.reshape(B, n, CHUNK, H, hs).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    kc = k.reshape(B, n, CHUNK, H, hs).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    vc = v.reshape(B, n, CHUNK, H, hs).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    wc = w.reshape(B, n, CHUNK, H, hs).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+
+    def body(S, xs):
+        rb, kb, vb, wb = xs  # [B, H, C, hs]
+        logw = jnp.log(jnp.clip(wb, 1e-6, 1.0))
+        c_incl = jnp.cumsum(logw, axis=2)           # sum_{j<=i} log w_j
+        c_excl = c_incl - logw                       # sum_{j<i}
+        # inter-chunk: y_i += (r_i * exp(c_excl_i)) @ S
+        r_dec = rb * jnp.exp(c_excl)
+        y = jnp.einsum("bhck,bhkv->bhcv", r_dec, S)
+        # intra-chunk: strict-causal A + bonus diagonal
+        k_inv = kb * jnp.exp(-c_incl)
+        A = jnp.einsum("bhck,bhdk->bhcd", rb * jnp.exp(c_excl), k_inv)
+        idx = jnp.arange(CHUNK)
+        A = jnp.where(idx[None, None, :, None] > idx[None, None, None, :], A, 0.0)
+        y = y + jnp.einsum("bhcd,bhdv->bhcv", A, vb)
+        bonus = jnp.einsum("bhck,hk,bhck->bhc", rb, uf, kb)
+        y = y + bonus[..., None] * vb
+        # state update: S' = diag(exp(c_incl_C)) S + sum_j (k_j exp(c_C - c_j)) v_j^T
+        c_tot = c_incl[:, :, -1, :]
+        k_dec = kb * jnp.exp(c_tot[:, :, None, :] - c_incl)
+        S_new = S * jnp.exp(c_tot)[:, :, :, None] + \
+            jnp.einsum("bhck,bhcv->bhkv", k_dec, vb)
+        return S_new, y
+
+    state, ys = lax.scan(body, state.astype(jnp.float32), (rc, kc, vc, wc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, T, H, hs)
+    return y.astype(r.dtype), state
+
+
+def wkv_step(r, k, v, w, u, state):
+    """Single-token recurrence. r,k,v,w: [B, H, hs]; state [B, H, hs, hs]."""
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    kv = jnp.einsum("bhk,bhv->bhkv", kf, vf)
+    y = jnp.einsum("bhkv,bhk->bhv", state + u.astype(jnp.float32)[None, :, :, None] * kv, rf)
+    state = state * wf[..., None] + kv
+    return y.astype(r.dtype), state
+
+
+# --------------------------------------------------------------------------- #
+# Blocks
+# --------------------------------------------------------------------------- #
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent token-shift for the 5 projections. [B,S,D] -> 5x[B,S,D]."""
+    delta = x_prev - x
+    base = x + delta * p["mix_mu"][0].astype(x.dtype)  # coarse mix for the lora in
+    lo = jnp.einsum("bsd,dr->bsr", base, p["mix_w1"].astype(x.dtype))
+    lo = jnp.tanh(lo).reshape(*x.shape[:-1], 5, LORA_DIM)
+    adj = jnp.einsum("bsnr,nrd->bsnd", lo, p["mix_w2"].astype(x.dtype))
+    outs = []
+    for i in range(5):
+        mu = p["mix_mu"][i].astype(x.dtype) + adj[..., i, :]
+        outs.append(x + delta * mu)
+    return outs
+
+
+def time_mix(p, x, cfg: ModelConfig, x_prev, state):
+    """x: [B,S,D]; x_prev: [B,1,D] last token of previous segment;
+    state: [B,H,hs,hs]. Returns (out, new_x_prev, new_state)."""
+    B, S, D = x.shape
+    hs = cfg.rwkv_head_size
+    H = D // hs
+    shifted = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, shifted)
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"].astype(x.dtype))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"].astype(x.dtype)))
+    dw = jnp.einsum("bsd,dr->bsr", jnp.tanh(xw), p["decay_w1"].astype(x.dtype))
+    dw = jnp.einsum("bsr,rd->bsd", dw, p["decay_w2"].astype(x.dtype))
+    w = jnp.exp(-jnp.exp(p["decay_base"].astype(jnp.float32) +
+                         dw.astype(jnp.float32)))  # in (0,1), [B,S,D]
+    rh = r.reshape(B, S, H, hs)
+    kh = k.reshape(B, S, H, hs)
+    vh = v.reshape(B, S, H, hs)
+    wh = w.reshape(B, S, H, hs)
+    rh = pshard.constrain(rh, pshard.BATCH, None, "model", None)
+    kh = pshard.constrain(kh, pshard.BATCH, None, "model", None)
+    if S == 1:
+        y, state = wkv_step(rh[:, 0], kh[:, 0], vh[:, 0], wh[:, 0],
+                            p["bonus_u"], state)
+        y = y[:, None]
+    else:
+        pad = (-S) % CHUNK
+        if pad:
+            z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            rh, kh, vh = z(rh), z(kh), z(vh)
+            wh = jnp.pad(wh, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                         constant_values=1.0)
+        y, state = wkv_chunked(rh, kh, vh, wh, p["bonus_u"], state)
+        y = y[:, :S]
+    y = y.reshape(B, S, D)
+    # group-norm over heads
+    yf = y.astype(jnp.float32).reshape(B, S, H, hs)
+    mu = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.var(yf, axis=-1, keepdims=True)
+    yf = (yf - mu) * lax.rsqrt(var + 64e-5)
+    y = (yf.reshape(B, S, D) * p["gn_scale"].astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", y * g, p["wo"].astype(x.dtype))
+    return pshard.constrain(out, pshard.BATCH, None, None), x[:, -1:], state
+
+
+def channel_mix(p, x, x_prev):
+    shifted = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    delta = shifted - x
+    xk = x + delta * p["cmix_mu"][0].astype(x.dtype)
+    xr = x + delta * p["cmix_mu"][1].astype(x.dtype)
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cm_wr"].astype(x.dtype)))
+    k = jnp.einsum("bsd,df->bsf", xk, p["cm_wk"].astype(x.dtype))
+    k = pshard.constrain(k, pshard.BATCH, None, "model")
+    k = jnp.square(jax.nn.relu(k))
+    v = jnp.einsum("bsf,fd->bsd", k, p["cm_wv"].astype(x.dtype))
+    out = r * v
+    return pshard.constrain(out, pshard.BATCH, None, None), x[:, -1:]
+
+
+def _layer(cfg, x, lp, st):
+    """st: dict(tm_x [B,1,D], cm_x [B,1,D], wkv [B,H,hs,hs])."""
+    h, tm_x, wkv = time_mix(lp, L.rms_norm(x, lp["ln1"], cfg.norm_eps), cfg,
+                            st["tm_x"], st["wkv"])
+    x = x + h
+    h, cm_x = channel_mix(lp, L.rms_norm(x, lp["ln2"], cfg.norm_eps), st["cm_x"])
+    x = x + h
+    return x, {"tm_x": tm_x, "cm_x": cm_x, "wkv": wkv}
+
+
+def init_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    H = d // hs
+    dt = L.dtype_of(cfg.compute_dtype)
+    z = lambda *s: jnp.zeros(s, dt)
+    return {"tm_x": z(cfg.n_layers, batch, 1, d),
+            "cm_x": z(cfg.n_layers, batch, 1, d),
+            "wkv": jnp.zeros((cfg.n_layers, batch, H, hs, hs), jnp.float32)}
+
+
+def state_spec(cfg: ModelConfig, batch: int):
+    b_ax = "data" if batch > 1 else None  # pod handled by stacking in multi-pod
+    return {"tm_x": pshard.resolve_spec(None, b_ax, None, None),
+            "cm_x": pshard.resolve_spec(None, b_ax, None, None),
+            "wkv": pshard.resolve_spec(None, b_ax, "model", None, None)}
+
+
+def forward(params, tokens, cfg: ModelConfig, state=None):
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens, cfg)
+    if state is None:
+        state = init_state(cfg, B)
+
+    def body(x, xs):
+        lp, st = xs
+        x, st = _layer(cfg, x, lp, st)
+        return x, st
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+    x, new_state = lax.scan(body_fn, x, (params["layers"], state))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_state
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    x, _ = forward(params, batch["tokens"], cfg)
+    logits = L.logits_out(params["embed"], x, cfg)
+    ce = L.cross_entropy(logits, batch["targets"], cfg.vocab_size,
+                         batch.get("mask"))
+    return ce, {"loss": ce, "ce": ce, "aux": jnp.float32(0.0)}
+
+
+def prefill(params, tokens, cfg: ModelConfig):
+    x, state = forward(params, tokens, cfg)
+    return L.logits_out(params["embed"], x, cfg), state
+
+
+def decode_step(params, token, pos, state, cfg: ModelConfig):
+    del pos  # recurrent: position-free
+    x, new_state = forward(params, token[:, None], cfg, state)
+    logits = L.logits_out(params["embed"], x, cfg)[:, 0]
+    return logits, new_state
+
+
+def param_rules(cfg: ModelConfig):
+    return [
+        (r"embed/embedding", ("model", None)),
+        (r"embed/unembed", (None, "model")),
+        (r"w[rkvg]$|wo$|cm_wr", (None, None, "model")),   # [L, D, D]
+        (r"cm_wk", (None, None, "model")),                 # [L, D, F]
+        (r"cm_wv", (None, "model", None)),                 # [L, F, D]
+        (r"decay_w|mix_w", (None, None, None)),
+        (r".*", (None, None, None, None)),
+    ]

@@ -1,0 +1,221 @@
+"""Decoder-only transformer LM (dense / vlm / moe families).
+
+Layers are stacked into a single pytree and iterated with ``lax.scan`` so HLO
+size is O(1) in depth; each scan body is rematerialized (``jax.checkpoint``)
+when cfg.remat == 'full'.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro import pshard
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+
+
+def init_layer(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    p = {
+        "attn_norm": jnp.ones((cfg.d_model,), L.dtype_of(cfg.param_dtype)),
+        "attn": L.init_attention(ks[0], cfg),
+        "mlp_norm": jnp.ones((cfg.d_model,), L.dtype_of(cfg.param_dtype)),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe_lib.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg)
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    k_embed, k_layers, k_final = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    return {
+        "embed": L.init_embedding(k_embed, cfg),
+        "layers": stacked,
+        "final_norm": jnp.ones((cfg.d_model,), L.dtype_of(cfg.param_dtype)),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# Full-sequence forward (train / prefill)
+# --------------------------------------------------------------------------- #
+
+def _layer_fwd(cfg: ModelConfig, x, lp, positions, collect_kv: bool):
+    h, kv = L.attention_block(lp["attn"], L.rms_norm(x, lp["attn_norm"], cfg.norm_eps),
+                              cfg, positions=positions)
+    x = x + h
+    xn = L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    if cfg.family == "moe":
+        h, aux = moe_lib.moe_block(lp["moe"], xn, cfg)
+    else:
+        h, aux = L.mlp_block(lp["mlp"], xn, cfg), jnp.float32(0.0)
+    x = x + h
+    x = pshard.constrain(x, pshard.BATCH, None, None)
+    return x, aux, (kv if collect_kv else None)
+
+
+def forward(params, tokens, cfg: ModelConfig, *, collect_kv: bool = False):
+    """tokens [B, S] -> (hidden [B,S,D], aux_loss, kv_per_layer or None)."""
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(carry, lp):
+        x, aux = carry
+        x, aux_i, kv = _layer_fwd(cfg, x, lp, positions, collect_kv)
+        return (x, aux + aux_i), kv
+
+    if cfg.remat == "full":
+        body_fn = jax.checkpoint(body)
+    elif cfg.remat == "dots":
+        # selective remat: matmul outputs saved, elementwise recomputed —
+        # trades ~150MB/layer/device for skipping the 2ND forward recompute
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    else:
+        body_fn = body
+    if cfg.scan_layers:
+        (x, aux), kvs = lax.scan(body_fn, (x, jnp.float32(0.0)), params["layers"])
+    else:
+        aux = jnp.float32(0.0)
+        kv_list = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            (x, aux), kv = body_fn((x, aux), lp)
+            kv_list.append(kv)
+        kvs = (jax.tree.map(lambda *xs: jnp.stack(xs), *kv_list)
+               if collect_kv else None)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux, kvs
+
+
+def logits_fn(params, tokens, cfg: ModelConfig):
+    x, aux, _ = forward(params, tokens, cfg)
+    return L.logits_out(params["embed"], x, cfg), aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits, aux = logits_fn(params, batch["tokens"], cfg)
+    ce = L.cross_entropy(logits, batch["targets"], cfg.vocab_size,
+                         batch.get("mask"))
+    coef = cfg.moe.aux_loss_coef if cfg.moe else 0.0
+    loss = ce + coef * aux
+    return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+
+# --------------------------------------------------------------------------- #
+# Serving: prefill + single-token decode with KV cache
+# --------------------------------------------------------------------------- #
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    W = L.cache_width(cfg, seq_len)
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, W, cfg.n_kv_heads, hd)
+    dt = L.dtype_of(cfg.compute_dtype)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def cache_spec(cfg: ModelConfig, batch: int):
+    kv_ax = "model" if cfg.n_kv_heads >= 16 else None
+    b_ax = "data" if batch > 1 else None  # pod handled by stacking in multi-pod
+    # batch=1 long-decode: shard the window dim over data instead of batch
+    w_ax = "data" if batch == 1 else None
+    return {"k": pshard.resolve_spec(None, b_ax, w_ax, kv_ax, None),
+            "v": pshard.resolve_spec(None, b_ax, w_ax, kv_ax, None)}
+
+
+def prefill(params, tokens, cfg: ModelConfig):
+    """Returns (logits [B,S,V], cache at position S)."""
+    x, _, kvs = forward(params, tokens, cfg, collect_kv=True)
+    logits = L.logits_out(params["embed"], x, cfg)
+    k, v = kvs  # [L, B, S, KV, hd] each
+    S = tokens.shape[1]
+    W = L.cache_width(cfg, S)
+    if W < S:  # rolling window cache: keep last W keys in rolled slot order
+        k = jnp.roll(k[:, :, S - W:], shift=(S - W) % W, axis=2)
+        v = jnp.roll(v[:, :, S - W:], shift=(S - W) % W, axis=2)
+    return logits, {"k": k, "v": v}
+
+
+def decode_step(params, token, pos, cache, cfg: ModelConfig):
+    """token [B] int32, pos scalar int32 -> (logits [B,V], new cache)."""
+    B = token.shape[0]
+    x = L.embed(params["embed"], token[:, None], cfg)
+
+    def body(x, xs):
+        lp, ck, cv = xs
+        h, ck, cv = L.attention_decode(
+            lp["attn"], L.rms_norm(x, lp["attn_norm"], cfg.norm_eps),
+            ck, cv, pos, cfg)
+        x = x + h
+        xn = L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+        if cfg.family == "moe":
+            h, _ = moe_lib.moe_block(lp["moe"], xn, cfg)
+        else:
+            h = L.mlp_block(lp["mlp"], xn, cfg)
+        return x + h, {"k": ck, "v": cv}
+
+    x, new_cache = lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.logits_out(params["embed"], x, cfg)[:, 0]
+    return logits, new_cache
+
+
+# --------------------------------------------------------------------------- #
+# Parameter sharding rules (path-regex -> logical spec)
+# --------------------------------------------------------------------------- #
+
+def param_rules(cfg: ModelConfig):
+    if cfg.sharding_mode == "dp":
+        # pure data parallelism over BOTH axes: params replicated (fits for
+        # <=3B), only gradient all-reduces — zero param all-gathers
+        return [(r".*", (None, None, None, None))]
+    if cfg.sharding_mode == "fsdp":
+        # pure ZeRO-3: every weight matrix sharded over BOTH mesh axes on one
+        # dim; no tensor parallelism => no per-layer activation all-reduces,
+        # only per-layer param all-gathers + gradient reduce-scatters
+        dm = ("data", "model")
+        ep = cfg.moe and cfg.moe.n_experts % 16 == 0
+        return [
+            # vocab over ONE axis only: multi-axis-sharded gather operands
+            # crash XLA's SPMD gather partitioner (CHECK failure)
+            (r"embed/embedding", ("model", None)),
+            (r"embed/unembed", (None, dm)),
+            (r"attn/wq$", (None, dm, None, None)),
+            (r"attn/w[kv]$", (None, dm, None, None)),
+            (r"attn/wo$", (None, None, None, dm)),
+            (r"moe/router", (None, None, None)),
+            (r"moe/w[igo]$", (None, "model", "data", None) if ep
+             else (None, None, dm, None)),
+            (r"mlp/w[ig]$", (None, None, dm)),
+            (r"mlp/wo$", (None, dm, None)),
+            (r"norm", (None, None)),
+        ]
+    fsdp = "data" if cfg.fsdp else None
+    kv_ax = "model" if cfg.n_kv_heads >= 16 else None
+    return [
+        # embedding rows stay vocab-sharded only: a (vocab, d)-2D-sharded
+        # table crashes XLA's gather partitioner (SPMD CHECK failure)
+        (r"embed/embedding", ("model", None)),
+        (r"embed/unembed", (fsdp, "model")),
+        (r"attn/wq$", (None, fsdp, "model", None)),     # [L, D, H, hd]
+        (r"attn/w[kv]$", (None, fsdp, kv_ax, None)),
+        (r"attn/wo$", (None, "model", None, fsdp)),     # [L, H, hd, D]
+        (r"attn/b[qkv]$", (None, None, None)),
+        (r"moe/router", (None, None, None)),
+        (r"moe/w[ig]$", (None, "model", fsdp, None)) if (cfg.moe and cfg.moe.sharding == "ep")
+        else (r"moe/w[ig]$", (None, None, fsdp, "model")),  # [L, E, D, F]
+        (r"moe/wo$", (None, "model", None, fsdp)) if (cfg.moe and cfg.moe.sharding == "ep")
+        else (r"moe/wo$", (None, None, "model", fsdp)),     # [L, E, F, D]
+        (r"mlp/w[ig]$", (None, fsdp, "model")),         # [L, D, F]
+        (r"mlp/wo$", (None, "model", fsdp)),            # [L, F, D]
+        (r"norm", (None, None)),
+    ]

@@ -1,0 +1,3 @@
+from repro.optim.local import make_optimizer  # noqa: F401
+from repro.optim.fedopt import make_server_optimizer  # noqa: F401
+from repro.optim.schedules import make_schedule  # noqa: F401

@@ -1,0 +1,74 @@
+"""Server-side federated optimizers (Reddi et al., Adaptive Federated
+Optimization): FedAvg, FedAdagrad, FedYogi, FedAdam.
+
+The server treats the aggregated client delta as a pseudo-gradient:
+  delta = weighted_avg(client_params) - server_params
+  FedAvg:  x <- x + eta * delta                      (eta = 1 reproduces paper)
+  adaptive: moment updates on delta per the FedOpt family.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ServerOptimizer:
+    name: str
+    init: Callable
+    apply: Callable  # (server_params, delta, state) -> (params, state)
+
+
+def fedavg(eta: float = 1.0) -> ServerOptimizer:
+    def init(params):
+        return ()
+
+    def apply(params, delta, state):
+        new = jax.tree.map(lambda p, d: (p.astype(jnp.float32)
+                                         + eta * d.astype(jnp.float32)
+                                         ).astype(p.dtype), params, delta)
+        return new, state
+
+    return ServerOptimizer("fedavg", init, apply)
+
+
+def _adaptive(name: str, eta: float, b1: float, b2: float, tau: float):
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"m": z, "v": jax.tree.map(lambda p: jnp.full_like(p, tau ** 2,
+                                                                  jnp.float32),
+                                          params)}
+
+    def apply(params, delta, state):
+        df = jax.tree.map(lambda d: d.astype(jnp.float32), delta)
+        m = jax.tree.map(lambda m, d: b1 * m + (1 - b1) * d, state["m"], df)
+        if name == "fedadagrad":
+            v = jax.tree.map(lambda v, d: v + d * d, state["v"], df)
+        elif name == "fedyogi":
+            v = jax.tree.map(
+                lambda v, d: v - (1 - b2) * d * d * jnp.sign(v - d * d),
+                state["v"], df)
+        else:  # fedadam
+            v = jax.tree.map(lambda v, d: b2 * v + (1 - b2) * d * d,
+                             state["v"], df)
+        new = jax.tree.map(
+            lambda p, mi, vi: (p.astype(jnp.float32)
+                               + eta * mi / (jnp.sqrt(vi) + tau)).astype(p.dtype),
+            params, m, v)
+        return new, {"m": m, "v": v}
+
+    return ServerOptimizer(name, init, apply)
+
+
+def make_server_optimizer(name: str, *, eta: float = 1.0, b1: float = 0.9,
+                          b2: float = 0.99, tau: float = 1e-3) -> ServerOptimizer:
+    if name == "fedavg":
+        return fedavg(eta)
+    if name in ("fedyogi", "fedadam", "fedadagrad"):
+        # paper evaluates FedYogi vs FedAvg (Table 5 runs 3 vs 4)
+        eta_a = 0.01 if eta == 1.0 else eta
+        return _adaptive(name, eta_a, b1, b2, tau)
+    raise ValueError(f"unknown server optimizer {name!r}")

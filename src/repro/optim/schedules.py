@@ -1,0 +1,31 @@
+"""LR schedules. WSD (warmup-stable-decay) is MiniCPM's training recipe."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_schedule(name: str, base_lr: float, total_steps: int, *,
+                  warmup_steps: int = 0, decay_frac: float = 0.1):
+    if name == "constant":
+        return lambda step: jnp.asarray(base_lr, jnp.float32)
+    if name == "wsd":
+        decay_start = int(total_steps * (1.0 - decay_frac))
+
+        def wsd(step):
+            step = jnp.asarray(step, jnp.float32)
+            warm = base_lr * jnp.minimum(1.0, (step + 1) / max(1, warmup_steps))
+            decay_span = max(1, total_steps - decay_start)
+            decay = base_lr * jnp.exp(
+                -5.0 * jnp.maximum(0.0, step - decay_start) / decay_span)
+            return jnp.where(step < warmup_steps, warm,
+                             jnp.where(step < decay_start, base_lr, decay))
+        return wsd
+    if name == "cosine":
+        def cos(step):
+            step = jnp.asarray(step, jnp.float32)
+            warm = (step + 1) / max(1, warmup_steps)
+            prog = jnp.clip((step - warmup_steps) /
+                            max(1, total_steps - warmup_steps), 0.0, 1.0)
+            return base_lr * jnp.minimum(warm, 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return cos
+    raise ValueError(f"unknown schedule {name!r}")

@@ -1,0 +1,50 @@
+"""Exchange compression: int8 + top-k delta coding."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compression import compress, decompress, payload_bytes
+
+
+def _params(seed=0, n=5000):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(0, 1, (n,)), jnp.float32),
+            "b": jnp.asarray(rng.normal(0, 1, (64,)), jnp.float32)}
+
+
+def test_int8_roundtrip_error_bound():
+    p = _params()
+    payload = compress(p, "int8")
+    back = decompress(payload, like=p)
+    # quantization tiles span leaf boundaries: the bound is the GLOBAL amax
+    amax = max(float(jnp.max(jnp.abs(v))) for v in p.values())
+    for k in p:
+        err = np.max(np.abs(np.asarray(back[k] - p[k])))
+        assert err <= amax / 127.0 * 0.51 + 1e-5
+
+
+def test_int8_compresses_4x():
+    p = _params(n=200_000)
+    raw = sum(np.asarray(l).nbytes for l in jax.tree.leaves(p))
+    payload = compress(p, "int8")
+    assert payload_bytes(payload) < raw / 3.0  # ~4x minus scale overhead
+
+
+def test_topk_delta_keeps_largest():
+    base = _params(seed=1)
+    p = jax.tree.map(lambda x: x.copy(), base)
+    p["w"] = p["w"].at[7].add(100.0)  # one big delta
+    payload = compress(p, "topk", base=base, topk_frac=0.001)
+    back = decompress(payload, like=p, base=base)
+    assert abs(float(back["w"][7] - p["w"][7])) < 1e-3
+    # untouched coordinates come back as base
+    np.testing.assert_allclose(np.asarray(back["b"]), np.asarray(base["b"]),
+                               atol=1e-5)
+
+
+def test_none_passthrough():
+    p = _params()
+    payload = compress(p, "none")
+    back = decompress(payload, like=p)
+    np.testing.assert_array_equal(np.asarray(back["w"]), np.asarray(p["w"]))

@@ -1,0 +1,114 @@
+"""UnifyFL smart contract (paper Algorithm 1) state-machine semantics."""
+import pytest
+
+from repro.core.contract import UnifyFLContract
+from repro.core.ledger import Ledger
+
+
+def _setup(mode="sync", n=4):
+    led = Ledger([f"s{i}" for i in range(n)])
+    c = UnifyFLContract(mode)
+    led.attach_contract(c)
+    for i in range(n):
+        led.submit(f"s{i}", "register")
+    return led, c
+
+
+def test_majority_scorer_sampling():
+    led, c = _setup(n=5)
+    led.submit("orchestrator", "start_training")
+    led.submit("s0", "submit_model", cid="m0")
+    assign = led.submit("orchestrator", "start_scoring")
+    assert set(assign) == {"m0"}
+    # floor(N/2)+1 = 3 of 5
+    assert len(assign["m0"]) == 3
+    assert len(set(assign["m0"])) == 3
+
+
+def test_unregistered_sender_reverts():
+    led, c = _setup()
+    with pytest.raises(PermissionError):
+        led.submit("intruder", "submit_model", cid="x")
+
+
+def test_sync_straggler_deferred_to_next_round():
+    led, c = _setup()
+    led.submit("orchestrator", "start_training")
+    led.submit("s0", "submit_model", cid="m0")
+    led.submit("orchestrator", "start_scoring")  # window closed
+    ok = led.submit("s1", "submit_model", cid="m_late")  # straggler
+    assert ok is False
+    assert "m_late" not in {e.cid for e in c.get_round_models(1)}
+    led.submit("orchestrator", "end_scoring")
+    led.submit("orchestrator", "start_training")  # round 2 opens
+    assert "m_late" in {e.cid for e in c.get_round_models(2)}  # deferred in
+
+
+def test_sync_late_score_disregarded():
+    led, c = _setup()
+    led.submit("orchestrator", "start_training")
+    led.submit("s0", "submit_model", cid="m0")
+    assign = led.submit("orchestrator", "start_scoring")
+    scorer = assign["m0"][0]
+    led.submit("orchestrator", "end_scoring")  # scoring window closed
+    ok = led.submit(scorer, "submit_score", cid="m0", score=0.5)
+    assert ok is False
+    assert c.models["m0"].scores == {}
+
+
+def test_only_assigned_scorers_accepted():
+    led, c = _setup()
+    led.submit("orchestrator", "start_training")
+    led.submit("s0", "submit_model", cid="m0")
+    assign = led.submit("orchestrator", "start_scoring")
+    outsider = next(s for s in c.aggregators if s not in assign["m0"])
+    with pytest.raises(PermissionError):
+        led.submit(outsider, "submit_score", cid="m0", score=0.9)
+
+
+def test_async_assigns_scorers_immediately():
+    led, c = _setup(mode="async")
+    events = []
+    led.subscribe(lambda e, p: events.append((e, p)))
+    led.submit("s0", "submit_model", cid="m0")
+    starts = [p for e, p in events if e == "StartScoring"]
+    assert len(starts) == 1 and starts[0]["cid"] == "m0"
+    assert len(starts[0]["scorers"]) == c.quorum()
+
+
+def test_async_prefers_idle_scorers():
+    led, c = _setup(mode="async", n=5)
+    led.submit("s1", "set_busy", busy=True)
+    led.submit("s2", "set_busy", busy=True)
+    led.submit("s0", "submit_model", cid="m0")
+    # only 3 idle of 5 => pool = idle set (majority available)
+    assigned = c.models["m0"].assigned
+    assert all(a not in ("s1", "s2") for a in assigned)
+
+
+def test_scorer_reassignment_on_failure():
+    led, c = _setup(n=6)
+    led.submit("orchestrator", "start_training")
+    led.submit("s0", "submit_model", cid="m0")
+    assign = led.submit("orchestrator", "start_scoring")
+    dead = assign["m0"][0]
+    repl = led.submit("orchestrator", "reassign_scorer", cid="m0", dead=dead)
+    assert repl is not None and repl != dead
+    assert dead not in c.models["m0"].assigned
+    assert repl in c.models["m0"].assigned
+
+
+def test_elastic_membership():
+    led, c = _setup(n=3)
+    led.submit("s3", "register")
+    assert "s3" in c.aggregators and c.quorum() == 3
+    led.submit("s3", "deregister")
+    assert "s3" not in c.aggregators and c.quorum() == 2
+
+
+def test_latest_models_view_excludes_self():
+    led, c = _setup(mode="async")
+    led.submit("s0", "submit_model", cid="m0")
+    led.submit("s1", "submit_model", cid="m1")
+    view = c.get_latest_models_with_scores(exclude_owner="s0")
+    assert {v["cid"] for v in view} == {"m1"}

@@ -1,0 +1,70 @@
+"""Pure-function units of the jittable cross-silo exchange (the multi-device
+integration path is tests/test_exchange.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.exchange import (ExchangeConfig, _collapse_scores, _dq8,
+                                 _policy_weights, _q8, _sketch)
+
+
+def test_collapse_scores():
+    mat = jnp.asarray([[0.1, 0.9], [0.3, 0.5], [0.2, 0.7]])  # [scorer, model]
+    np.testing.assert_allclose(_collapse_scores(mat, "median"), [0.2, 0.7])
+    np.testing.assert_allclose(_collapse_scores(mat, "mean"),
+                               [0.2, 0.7], atol=1e-6)
+    np.testing.assert_allclose(_collapse_scores(mat, "min"), [0.1, 0.5])
+    np.testing.assert_allclose(_collapse_scores(mat, "max"), [0.3, 0.9])
+
+
+@pytest.mark.parametrize("policy", ["all", "self", "top_k", "above_average"])
+def test_policy_weights_normalized(policy):
+    cfg = ExchangeConfig(policy=policy, k=2)
+    scores = jnp.asarray([0.5, 0.9, 0.1, 0.7])
+    w = _policy_weights(scores, jnp.int32(0), cfg, 4)
+    assert w.shape == (4,)
+    np.testing.assert_allclose(float(jnp.sum(w)), 1.0, rtol=1e-5)
+    assert float(jnp.min(w)) >= 0.0
+
+
+def test_policy_self_is_identity():
+    cfg = ExchangeConfig(policy="self")
+    w = _policy_weights(jnp.asarray([0.5, 0.9]), jnp.int32(1), cfg, 2)
+    np.testing.assert_allclose(np.asarray(w), [0.0, 1.0])
+
+
+def test_policy_top_k_picks_best_peers():
+    cfg = ExchangeConfig(policy="top_k", k=2, mix_rate=0.5)
+    scores = jnp.asarray([0.0, 0.9, 0.1, 0.8])  # my_idx=0
+    w = np.asarray(_policy_weights(scores, jnp.int32(0), cfg, 4))
+    assert w[1] > 0 and w[3] > 0 and w[2] == 0.0
+    assert w[0] == pytest.approx(0.5)
+
+
+def test_policy_above_average_excludes_poison():
+    cfg = ExchangeConfig(policy="above_average")
+    scores = jnp.asarray([0.5, 0.6, -9.0])  # model 2 poisoned
+    w = np.asarray(_policy_weights(scores, jnp.int32(0), cfg, 3))
+    assert w[2] == 0.0 and w[1] > 0.0
+
+
+def test_q8_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 32)) * 3
+    q, s = _q8(x)
+    assert q.dtype == jnp.int8
+    back = _dq8(q, s, jnp.float32)
+    amax = float(jnp.max(jnp.abs(x)))
+    assert float(jnp.max(jnp.abs(back - x))) <= amax / 127 * 0.51 + 1e-6
+
+
+def test_sketch_preserves_relative_distance():
+    key = jax.random.PRNGKey(1)
+    base = {"a": jax.random.normal(key, (64, 32)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (128,))}
+    near = jax.tree.map(lambda x: x + 0.01, base)
+    far = jax.tree.map(lambda x: x + jnp.sign(x) * 1.0, base)
+    s0, s1, s2 = (_sketch(t, 256) for t in (base, near, far))
+    d_near = float(jnp.sum((s0 - s1) ** 2))
+    d_far = float(jnp.sum((s0 - s2) ** 2))
+    assert d_far > d_near  # krum ranking survives the sketch

@@ -1,0 +1,94 @@
+"""FL substrate: FedAvg math, FedOpt family, client local training."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FedConfig
+from repro.configs import get_config
+from repro.fed.aggregator import SiloAggregator, fedavg_params
+from repro.fed.client import Client
+from repro.models import build_model
+from repro.optim.fedopt import make_server_optimizer
+from repro.optim.local import make_optimizer
+from repro.optim.schedules import make_schedule
+
+
+def test_fedavg_weighted_mean_exact():
+    p1 = {"w": jnp.asarray([1.0, 2.0]), "b": jnp.asarray([0.0])}
+    p2 = {"w": jnp.asarray([3.0, 4.0]), "b": jnp.asarray([1.0])}
+    avg = fedavg_params([p1, p2], [1.0, 3.0])
+    np.testing.assert_allclose(np.asarray(avg["w"]), [2.5, 3.5], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(avg["b"]), [0.75], rtol=1e-6)
+
+
+def test_fedavg_convexity():
+    rng = np.random.default_rng(0)
+    ps = [{"w": jnp.asarray(rng.normal(0, 1, (64,)), jnp.float32)}
+          for _ in range(5)]
+    avg = fedavg_params(ps, [1] * 5)
+    stacked = np.stack([np.asarray(p["w"]) for p in ps])
+    assert np.all(np.asarray(avg["w"]) <= stacked.max(0) + 1e-5)
+    assert np.all(np.asarray(avg["w"]) >= stacked.min(0) - 1e-5)
+
+
+@pytest.mark.parametrize("name", ["fedavg", "fedyogi", "fedadam", "fedadagrad"])
+def test_server_optimizers_move_toward_delta(name):
+    opt = make_server_optimizer(name)
+    params = {"w": jnp.zeros((8,))}
+    delta = {"w": jnp.ones((8,))}
+    state = opt.init(params)
+    new, state = opt.apply(params, delta, state)
+    assert float(jnp.mean(new["w"])) > 0  # moved in delta direction
+    new2, _ = opt.apply(new, delta, state)
+    assert float(jnp.mean(new2["w"])) > float(jnp.mean(new["w"]))
+
+
+def test_sgd_momentum_and_adam():
+    for name, kw in (("sgd", {"momentum": 0.9}), ("adam", {})):
+        opt = make_optimizer(name, **kw)
+        params = {"w": jnp.ones((4,))}
+        st = opt.init(params)
+        grads = {"w": jnp.ones((4,))}
+        new, st = opt.update(grads, st, params, 0.1)
+        assert float(jnp.mean(new["w"])) < 1.0
+
+
+def test_wsd_schedule_shape():
+    sched = make_schedule("wsd", 1.0, 100, warmup_steps=10, decay_frac=0.2)
+    assert float(sched(0)) < 0.2            # warmup
+    assert float(sched(50)) == 1.0          # stable
+    assert float(sched(99)) < 0.1           # decay
+    const = make_schedule("constant", 0.01, 100)
+    assert float(const(7)) == pytest.approx(0.01)
+
+
+def test_client_local_train_changes_params_and_counts():
+    cfg = get_config("paper-cnn")
+    model = build_model(cfg)
+    rng = np.random.default_rng(0)
+    data = {"x": rng.normal(0, 1, (64, 32, 32, 3)).astype(np.float32),
+            "y": rng.integers(0, 10, 64).astype(np.int32)}
+    client = Client("c0", model, data, batch_size=16, lr=0.05)
+    params = model.init(jax.random.PRNGKey(0))
+    new_params, n, loss = client.local_train(params, epochs=1)
+    assert n == 64 and loss > 0
+    diff = sum(float(jnp.sum(jnp.abs(a - b)))
+               for a, b in zip(jax.tree.leaves(params),
+                               jax.tree.leaves(new_params)))
+    assert diff > 0
+
+
+def test_byzantine_client_flips_sign():
+    cfg = get_config("paper-cnn")
+    model = build_model(cfg)
+    rng = np.random.default_rng(0)
+    data = {"x": rng.normal(0, 1, (32, 32, 32, 3)).astype(np.float32),
+            "y": rng.integers(0, 10, 32).astype(np.int32)}
+    client = Client("evil", model, data, byzantine="signflip", batch_size=16)
+    params = model.init(jax.random.PRNGKey(0))
+    new_params, _, _ = client.local_train(params, epochs=1)
+    # sign flip: large negative correlation with honest params
+    v0 = np.concatenate([np.asarray(l).ravel() for l in jax.tree.leaves(params)])
+    v1 = np.concatenate([np.asarray(l).ravel() for l in jax.tree.leaves(new_params)])
+    assert np.dot(v0, v1) < 0

@@ -1,0 +1,79 @@
+"""The roofline extractor: HLO text parsing, trip-count multipliers,
+collective accounting (the numbers EXPERIMENTS.md §Roofline is built from)."""
+import textwrap
+
+from repro.launch import hlostats
+
+MODULE = textwrap.dedent("""\
+    HloModule jit_step, is_scheduled=true
+
+    %wide.body.1 (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+      %p = (s32[], f32[8,16]) parameter(0)
+      %iv = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,16] get-tuple-element(%p), index=1
+      %w = f32[16,16] constant({...})
+      %dot.1 = f32[8,16] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar.1 = f32[8,16] all-reduce(%dot.1), replica_groups={}, to_apply=%add
+      %one = s32[] constant(1)
+      %ivn = s32[] add(%iv, %one)
+      ROOT %t = (s32[], f32[8,16]) tuple(%ivn, %ar.1)
+    }
+
+    %wide.cond.1 (pc: (s32[], f32[8,16])) -> pred[] {
+      %pc = (s32[], f32[8,16]) parameter(0)
+      %ivc = s32[] get-tuple-element(%pc), index=0
+      %lim = s32[] constant(7)
+      ROOT %cmp = pred[] compare(%ivc, %lim), direction=LT
+    }
+
+    ENTRY %main.1 (a: f32[8,16]) -> f32[8,16] {
+      %a = f32[8,16] parameter(0)
+      %zero = s32[] constant(0)
+      %t0 = (s32[], f32[8,16]) tuple(%zero, %a)
+      %wh = (s32[], f32[8,16]) while(%t0), condition=%wide.cond.1, body=%wide.body.1, backend_config={"known_trip_count":{"n":"7"}}
+      %res = f32[8,16] get-tuple-element(%wh), index=1
+      %ag.1 = f32[16,16] all-gather(%res), dimensions={0}
+      %dot.2 = f32[16,16] dot(%ag.1, %ag.1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      ROOT %out = f32[16,16] copy(%dot.2)
+    }
+""")
+
+
+def test_parse_finds_computations_and_entry():
+    comps, entry = hlostats.parse_module(MODULE)
+    assert entry == "main.1"
+    assert "wide.body.1" in comps and "wide.cond.1" in comps
+
+
+def test_trip_count_from_backend_config():
+    comps, entry = hlostats.parse_module(MODULE)
+    mult = hlostats.compute_multipliers(comps, entry)
+    assert mult["wide.body.1"] == 7
+    assert mult["wide.cond.1"] == 8  # trips + 1
+
+
+def test_flops_scaled_by_trip_count():
+    st = hlostats.analyze(MODULE)
+    body_dot = 2 * 8 * 16 * 16      # executed 7x
+    entry_dot = 2 * 16 * 16 * 16    # executed once
+    assert st.flops == 7 * body_dot + entry_dot
+    assert st.flops_unscaled == body_dot + entry_dot
+
+
+def test_collective_accounting():
+    st = hlostats.analyze(MODULE)
+    # all-reduce: 8*16*4 bytes * 7 trips, cost factor 2; all-gather out 16*16*4
+    ar_bytes = 8 * 16 * 4 * 7
+    ag_bytes = 16 * 16 * 4
+    assert st.collective_bytes["all-reduce"] == ar_bytes
+    assert st.collective_bytes["all-gather"] == ag_bytes
+    assert st.collective_cost_bytes == 2 * ar_bytes + ag_bytes
+    assert st.collective_count == 7 + 1
+
+
+def test_condition_constant_fallback():
+    # strip backend_config: trip count must come from the condition constant
+    txt = MODULE.replace(', backend_config={"known_trip_count":{"n":"7"}}', "")
+    comps, entry = hlostats.parse_module(txt)
+    mult = hlostats.compute_multipliers(comps, entry)
+    assert mult["wide.body.1"] == 7

@@ -1,0 +1,129 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs pure-jnp oracles,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels import multikrum as mk
+from repro.kernels import quant as qk
+from repro.kernels import wsum as ws
+from repro.kernels import rwkv6 as rk
+
+
+@pytest.mark.parametrize("m,n", [(2, 2048), (5, 4096), (8, 10240), (16, 2048)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_multikrum_gram_sweep(m, n, dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(m * n), (m, n)) * 2).astype(dtype)
+    d_pallas = ops.pairwise_dists(x)
+    d_ref = ref.multikrum_dists(x)
+    tol = 1e-3 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(d_pallas), np.asarray(d_ref),
+                               rtol=tol, atol=tol * np.max(np.asarray(d_ref)))
+
+
+@pytest.mark.parametrize("m", [3, 4, 9])
+def test_multikrum_scores_match_ref(m):
+    x = jax.random.normal(jax.random.PRNGKey(m), (m, 3000))
+    s1 = ops.multikrum_scores(x, 2)
+    s2 = ref.multikrum_scores(x, 2)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4,
+                               atol=1e-2)
+
+
+def test_multikrum_flags_outlier():
+    key = jax.random.PRNGKey(0)
+    honest = jax.random.normal(key, (4, 5000)) * 0.1
+    outlier = jax.random.normal(jax.random.fold_in(key, 1), (1, 5000)) * 5.0
+    x = jnp.concatenate([honest, outlier])
+    scores = ops.multikrum_scores(x, 2)  # sum of dists: outlier largest
+    assert int(jnp.argmax(scores)) == 4
+
+
+@pytest.mark.parametrize("m,n", [(2, 4096), (7, 8192), (12, 12288)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wsum_sweep(m, n, dtype):
+    key = jax.random.PRNGKey(n + m)
+    x = (jax.random.normal(key, (m, n))).astype(dtype)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (m,))
+    a = ops.weighted_sum(x, w)
+    b = ref.weighted_sum(x, w)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), rtol=tol, atol=tol)
+
+
+def test_wsum_padding_path():
+    x = jax.random.normal(jax.random.PRNGKey(3), (3, 5000))  # not tile-aligned
+    w = jnp.asarray([0.2, 0.3, 0.5])
+    a = ops.weighted_sum(x, w)
+    b = ref.weighted_sum(x, w)
+    assert a.shape == (5000,)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [qk.TILE * qk.LANE, 2 * qk.TILE * qk.LANE, 300_000])
+def test_quant_roundtrip(n):
+    x = jax.random.normal(jax.random.PRNGKey(n), (n,)) * 4.0
+    q, s, n_orig = ops.quantize(x)
+    xd = ops.dequantize(q, s, n_orig)
+    assert xd.shape == (n,)
+    # per-tile max error <= scale/2 with scale = amax/127
+    err = np.abs(np.asarray(xd - x))
+    amax = float(jnp.max(jnp.abs(x)))
+    assert err.max() <= amax / 127.0 * 0.51 + 1e-6
+
+
+def test_quant_matches_ref():
+    x = jax.random.normal(jax.random.PRNGKey(9), (qk.TILE * qk.LANE,))
+    q1, s1, _ = ops.quantize(x)
+    q2, s2 = ref.quantize_int8(x, qk.TILE)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+
+
+@pytest.mark.parametrize("B,T,H,hs", [(1, 32, 1, 8), (2, 64, 2, 16),
+                                      (1, 96, 4, 32), (3, 33, 2, 16)])
+def test_wkv6_kernel_vs_naive(B, T, H, hs):
+    key = jax.random.PRNGKey(B * T + H)
+    mk_ = lambda i, s=0.5: jax.random.normal(jax.random.fold_in(key, i),
+                                             (B, T, H, hs)) * s
+    r, k, v = mk_(0), mk_(1), mk_(2)
+    w = jax.nn.sigmoid(mk_(3, 1.0)) * 0.5 + 0.45
+    u = jax.random.normal(jax.random.fold_in(key, 4), (H, hs)) * 0.3
+    st = jax.random.normal(jax.random.fold_in(key, 5), (B, H, hs, hs)) * 0.1
+    y1, s1 = ops.wkv6(r, k, v, w, u, st)
+    y2, s2 = ref.wkv6_naive(r, k, v, w, u, st)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=3e-3,
+                               atol=3e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=3e-3,
+                               atol=3e-3)
+
+
+def test_wkv6_state_chaining():
+    """Processing [0:T] must equal [0:T/2] then [T/2:T] with carried state."""
+    B, T, H, hs = 1, 64, 2, 16
+    key = jax.random.PRNGKey(7)
+    mk_ = lambda i: jax.random.normal(jax.random.fold_in(key, i), (B, T, H, hs)) * 0.5
+    r, k, v = mk_(0), mk_(1), mk_(2)
+    w = jax.nn.sigmoid(mk_(3)) * 0.5 + 0.45
+    u = jax.random.normal(jax.random.fold_in(key, 4), (H, hs)) * 0.3
+    s0 = jnp.zeros((B, H, hs, hs))
+    y_all, s_all = ops.wkv6(r, k, v, w, u, s0)
+    h = T // 2
+    y1, s1 = ops.wkv6(r[:, :h], k[:, :h], v[:, :h], w[:, :h], u, s0)
+    y2, s2 = ops.wkv6(r[:, h:], k[:, h:], v[:, h:], w[:, h:], u, s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_all), rtol=3e-3, atol=3e-3)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_all), rtol=3e-3,
+                               atol=3e-3)
+
+
+def test_flatten_unflatten_roundtrip():
+    tree = {"a": jnp.ones((3, 4)), "b": {"c": jnp.arange(5, dtype=jnp.float32)}}
+    vec, spec = ops.flatten_pytree(tree)
+    assert vec.shape == (17,)
+    tree2 = ops.unflatten_pytree(vec, spec)
+    for l1, l2 in zip(jax.tree.leaves(tree), jax.tree.leaves(tree2)):
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))

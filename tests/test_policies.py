@@ -1,0 +1,66 @@
+"""Aggregation + score policies (paper §3.4.4)."""
+import random
+
+import pytest
+
+from repro.core.policies import (AGG_POLICIES, SCORE_POLICIES, Candidate,
+                                 select_models)
+
+
+def _cands(scores):
+    return [Candidate(f"c{i}", f"o{i}", s) for i, s in enumerate(scores)]
+
+
+def test_score_policies():
+    assert SCORE_POLICIES["median"]([1, 2, 9]) == 2
+    assert SCORE_POLICIES["mean"]([1, 2, 9]) == 4
+    assert SCORE_POLICIES["min"]([1, 2, 9]) == 1
+    assert SCORE_POLICIES["max"]([1, 2, 9]) == 9
+
+
+def test_top_k():
+    picked = AGG_POLICIES["top_k"](_cands([0.1, 0.9, 0.5, 0.7]), 0.0, k=2)
+    assert [c.cid for c in picked] == ["c1", "c3"]
+
+
+def test_above_average_excludes_poisoned():
+    # byzantine model scores near zero; smart policy drops it (paper Fig 7b)
+    picked = AGG_POLICIES["above_average"](_cands([0.6, 0.65, 0.01]), 0.0)
+    assert {c.cid for c in picked} == {"c0", "c1"}
+
+
+def test_above_median_keeps_at_least_half():
+    for scores in ([0.1, 0.2, 0.3, 0.4], [0.5], [0.9, 0.1, 0.5]):
+        picked = AGG_POLICIES["above_median"](_cands(scores), 0.0)
+        assert len(picked) >= (len(scores) + 1) // 2
+
+
+def test_above_self():
+    picked = AGG_POLICIES["above_self"](_cands([0.3, 0.8]), 0.5)
+    assert [c.cid for c in picked] == ["c1"]
+
+
+def test_self_and_all():
+    cands = _cands([0.5, 0.6])
+    assert AGG_POLICIES["self"](cands, 0.0) == []
+    assert len(AGG_POLICIES["all"](cands, 0.0)) == 2
+
+
+def test_random_k_deterministic_with_rng():
+    cands = _cands([0.5, 0.6, 0.7, 0.8])
+    p1 = AGG_POLICIES["random_k"](cands, 0.0, k=2, rng=random.Random(1))
+    p2 = AGG_POLICIES["random_k"](cands, 0.0, k=2, rng=random.Random(1))
+    assert [c.cid for c in p1] == [c.cid for c in p2]
+    assert len(p1) == 2
+
+
+def test_select_models_collapses_scores_and_filters_unscored():
+    entries = [
+        {"cid": "a", "owner": "oa", "scores": {"s1": 0.9, "s2": 0.1, "s3": 0.8}},
+        {"cid": "b", "owner": "ob", "scores": {}},  # unscored
+    ]
+    picked = select_models(entries, agg_policy="top_k", score_policy="median",
+                           k=2)
+    assert [c.cid for c in picked] == ["a"]  # unscored b ineligible for top_k
+    picked_all = select_models(entries, agg_policy="all", score_policy="median")
+    assert {c.cid for c in picked_all} == {"a", "b"}  # sampling policies keep it

@@ -1,0 +1,121 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import hashlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.policies import AGG_POLICIES, Candidate, SCORE_POLICIES
+from repro.core.store import compute_cid, deserialize_pytree, serialize_pytree
+from repro.kernels import ops, ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.lists(st.floats(-1e3, 1e3), min_size=1, max_size=9))
+def test_score_policies_within_range(scores):
+    for name, fn in SCORE_POLICIES.items():
+        v = fn(scores)
+        assert min(scores) - 1e-9 <= v <= max(scores) + 1e-9
+
+
+@given(st.lists(st.floats(0, 1), min_size=2, max_size=10),
+       st.integers(1, 5))
+def test_top_k_subset_and_ordering(scores, k):
+    cands = [Candidate(f"c{i}", f"o{i}", s) for i, s in enumerate(scores)]
+    picked = AGG_POLICIES["top_k"](cands, 0.0, k=k)
+    assert len(picked) == min(k, len(cands))
+    assert {c.cid for c in picked} <= {c.cid for c in cands}
+    pscores = [c.score for c in picked]
+    assert pscores == sorted(pscores, reverse=True)
+    rest = [c.score for c in cands if c.cid not in {p.cid for p in picked}]
+    if picked and rest:
+        assert min(pscores) >= max(rest) - 1e-12
+
+
+@given(st.lists(st.floats(0, 1), min_size=1, max_size=10))
+def test_above_average_never_empty_unless_degenerate(scores):
+    cands = [Candidate(f"c{i}", f"o{i}", s) for i, s in enumerate(scores)]
+    picked = AGG_POLICIES["above_average"](cands, 0.0)
+    assert len(picked) >= 1  # max is always >= mean
+
+
+@given(st.lists(st.tuples(st.integers(0, 100), st.integers(1, 16)),
+                min_size=1, max_size=5))
+def test_cid_depends_only_on_content(leaf_specs):
+    tree = {f"k{i}": np.full((r,), v, np.float32)
+            for i, (v, r) in enumerate(leaf_specs)}
+    d1 = serialize_pytree(tree)
+    d2 = serialize_pytree({k: v.copy() for k, v in tree.items()})
+    assert compute_cid(d1) == compute_cid(d2)
+    back = deserialize_pytree(d1, like=tree)
+    for a, b in zip(back.values(), tree.values()):
+        np.testing.assert_array_equal(np.asarray(a), b)
+
+
+@given(st.integers(2, 8), st.integers(0, 2 ** 31 - 1))
+def test_fedavg_idempotent_on_identical_models(m, seed):
+    rng = np.random.default_rng(seed)
+    p = {"w": jnp.asarray(rng.normal(0, 1, (257,)), jnp.float32)}
+    from repro.fed.aggregator import fedavg_params
+    avg = fedavg_params([p] * m, [1.0] * m)
+    np.testing.assert_allclose(np.asarray(avg["w"]), np.asarray(p["w"]),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(2, 6), st.integers(0, 2 ** 31 - 1))
+def test_pairwise_dists_metric_properties(m, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 1, (m, 513)), jnp.float32)
+    d = np.asarray(ops.pairwise_dists(x))
+    assert np.allclose(d, d.T, atol=1e-3)          # symmetry
+    assert np.allclose(np.diag(d), 0.0, atol=1e-3)  # identity
+    assert (d >= -1e-4).all()                       # non-negativity
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.1, 10.0))
+def test_quantize_scale_invariance_of_error(seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, scale, (ops.QUANT_BLOCK,)), jnp.float32)
+    q, s, n = ops.quantize(x)
+    xd = ops.dequantize(q, s, n)
+    rel = float(jnp.max(jnp.abs(xd - x))) / max(float(jnp.max(jnp.abs(x))), 1e-9)
+    assert rel <= 1.0 / 127.0 * 0.51 + 1e-6
+
+
+@given(st.integers(1, 4), st.integers(1, 3))
+def test_wkv6_zero_inputs_zero_outputs(b, h):
+    hs = 8
+    T = 32
+    z = jnp.zeros((b, T, h, hs))
+    w = jnp.full((b, T, h, hs), 0.9)
+    u = jnp.zeros((h, hs))
+    st0 = jnp.zeros((b, h, hs, hs))
+    y, s1 = ops.wkv6(z, z, z, w, u, st0)
+    assert float(jnp.max(jnp.abs(y))) == 0.0
+    assert float(jnp.max(jnp.abs(s1))) == 0.0
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+def test_ledger_replay_determinism(seed):
+    from repro.core.contract import UnifyFLContract
+    from repro.core.ledger import Ledger
+    rng = np.random.default_rng(seed)
+    led = Ledger(["a", "b", "c"])
+    c1 = UnifyFLContract("async")
+    led.attach_contract(c1)
+    for s in ("a", "b", "c"):
+        led.submit(s, "register")
+    for i in range(int(rng.integers(1, 6))):
+        led.submit(rng.choice(["a", "b", "c"]), "submit_model", cid=f"m{i}")
+    # replay into a fresh contract: identical state
+    c2 = UnifyFLContract("async")
+    for blk in led.blocks:
+        for tx in blk.txs:
+            c2.execute(tx, blk)
+    assert c1.latest_by_owner == c2.latest_by_owner
+    assert {k: v.assigned for k, v in c1.models.items()} == \
+           {k: v.assigned for k, v in c2.models.items()}

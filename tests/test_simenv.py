@@ -1,0 +1,47 @@
+"""Discrete-event runtime: ordering, until-semantics, determinism."""
+from repro.core.simenv import SimEnv
+
+
+def test_events_fire_in_time_order():
+    env = SimEnv()
+    seen = []
+    env.schedule(2.0, lambda: seen.append("b"))
+    env.schedule(1.0, lambda: seen.append("a"))
+    env.schedule(3.0, lambda: seen.append("c"))
+    env.run()
+    assert seen == ["a", "b", "c"]
+    assert env.now == 3.0
+
+
+def test_ties_fifo():
+    env = SimEnv()
+    seen = []
+    for i in range(5):
+        env.schedule(1.0, lambda i=i: seen.append(i))
+    env.run()
+    assert seen == [0, 1, 2, 3, 4]
+
+
+def test_run_until_pauses_and_resumes():
+    env = SimEnv()
+    seen = []
+    env.schedule(1.0, lambda: seen.append(1))
+    env.schedule(5.0, lambda: seen.append(5))
+    env.run(until=2.0)
+    assert seen == [1]
+    env.run()
+    assert seen == [1, 5]
+
+
+def test_nested_scheduling():
+    env = SimEnv()
+    seen = []
+
+    def outer():
+        seen.append("outer")
+        env.schedule(1.0, lambda: seen.append("inner"))
+
+    env.schedule(1.0, outer)
+    env.run()
+    assert seen == ["outer", "inner"]
+    assert env.now == 2.0
