@@ -1,9 +1,16 @@
 """Kernel microbenchmarks: Pallas (interpret on CPU / native on TPU) vs the
 jnp oracle, per paper compute hot-spot (scoring, aggregation, compression,
 WKV6). On CPU these measure the oracle's wall time (the kernels' correctness
-path); on TPU the same harness times the real kernels."""
+path); on TPU the same harness times the real kernels.
+
+The fused-q8 section compares the int8-native aggregation path (wsum_q8 /
+gram_q8: scales folded into the accumulation, int8 never materialized as
+f32) against dequantize-then-f32-aggregate, reporting wall-clock and the
+HBM bytes each path moves. Results land in ``BENCH_kernels.json`` so the
+perf trajectory is tracked across PRs."""
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -22,20 +29,82 @@ def _time(fn, *args, iters=5):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def main(quick: bool = True):
+def _q8_bytes(M: int, N: int, out_bytes: int, fused: bool) -> int:
+    """HBM bytes of one aggregation pass over M int8 models of length N.
+
+    fused: read int8 + per-tile scales, write ``out_bytes`` of result
+    (4*N for the weighted sum, 4*(M*M + M) for the Gram + norms).
+    unfused: additionally materialize the dequantized f32 [M, N] (write)
+    and stream it back in for the f32 aggregation kernel (read)."""
+    scales = (N // ops.QTILE) * 4 * M
+    base = M * N + scales + out_bytes
+    return base if fused else base + 2 * (4 * M * N)
+
+
+def main(quick: bool = True, out_path: str = "BENCH_kernels.json"):
     out = {}
     with timed("kernelbench"):
         M, N = 8, 1 << 20  # 8 models x 1M params (63x the paper's CNN)
         x = jax.random.normal(jax.random.PRNGKey(0), (M, N), jnp.float32)
         w = jnp.ones((M,)) / M
         us = _time(lambda a: ref.multikrum_dists(a), x)
+        out["multikrum_ref_us"] = us
         emit("kernel_multikrum_ref_us", f"{us:.0f}", f"{M}x{N}")
         us = _time(lambda a, b: ref.weighted_sum(a, b), x, w)
+        out["wsum_ref_us"] = us
         emit("kernel_wsum_ref_us", f"{us:.0f}",
              f"{M * N * 4 / (us / 1e6) / 1e9:.1f} GB/s effective")
         v = x[0]
         us = _time(lambda a: ref.quantize_int8(a, 1024), v)
+        out["quant_ref_us"] = us
         emit("kernel_quant_ref_us", f"{us:.0f}", f"n={N}")
+
+        # ---- fused q8 aggregation vs dequantize-then-f32 ------------------ #
+        # TPU runs the real Pallas kernels; on CPU the interpreter would
+        # dominate, so the oracle stands in (same convention as the rows
+        # above — there the fused/unfused wall-clocks are both oracle-path
+        # and only the byte ratios are meaningful).
+        force = "auto" if jax.default_backend() == "tpu" else "ref"
+        pairs = [ref.quantize_int8(x[i], ops.QTILE) for i in range(M)]
+        q = jnp.stack([p[0] for p in pairs])
+        s = jnp.stack([p[1] for p in pairs])
+
+        def unfused_wsum(qq, ss, ww):
+            xf = ref.dequantize_rows(qq, ss, ops.QTILE)  # f32 [M, N] realized
+            return ref.weighted_sum(xf, ww)
+
+        us_f = _time(lambda *a: ops.weighted_sum_q8(*a, N, force), q, s, w)
+        us_u = _time(unfused_wsum, q, s, w)
+        by_f = _q8_bytes(M, N, 4 * N, True)
+        by_u = _q8_bytes(M, N, 4 * N, False)
+        out.update(wsum_q8_fused_us=us_f, wsum_q8_unfused_us=us_u,
+                   wsum_q8_fused_bytes=by_f, wsum_q8_unfused_bytes=by_u,
+                   wsum_q8_bytes_ratio=by_f / by_u,
+                   wsum_q8_speedup=us_u / max(us_f, 1e-9),
+                   q8_timed_path=force)
+        emit("kernel_wsum_q8_fused_us", f"{us_f:.0f}",
+             f"{by_f / (us_f / 1e6) / 1e9:.1f} GB/s effective ({force})")
+        emit("kernel_wsum_q8_unfused_us", f"{us_u:.0f}",
+             f"speedup={us_u / max(us_f, 1e-9):.2f}x")
+        emit("kernel_wsum_q8_bytes_ratio", f"{by_f / by_u:.3f}",
+             f"{by_f >> 20} MiB vs {by_u >> 20} MiB per pass")
+
+        def unfused_gram(qq, ss):
+            xf = ref.dequantize_rows(qq, ss, ops.QTILE)
+            return ref.multikrum_dists(xf)
+
+        us_gf = _time(lambda *a: ops.pairwise_dists_q8(*a, force), q, s)
+        us_gu = _time(unfused_gram, q, s)
+        gby_f = _q8_bytes(M, N, 4 * (M * M + M), True)
+        gby_u = _q8_bytes(M, N, 4 * (M * M + M), False)
+        out.update(gram_q8_fused_us=us_gf, gram_q8_unfused_us=us_gu,
+                   gram_q8_bytes_ratio=gby_f / gby_u,
+                   gram_q8_speedup=us_gu / max(us_gf, 1e-9))
+        emit("kernel_gram_q8_fused_us", f"{us_gf:.0f}", f"{M}x{N} ({force})")
+        emit("kernel_gram_q8_unfused_us", f"{us_gu:.0f}",
+             f"speedup={us_gu / max(us_gf, 1e-9):.2f}x")
+        emit("kernel_gram_q8_bytes_ratio", f"{gby_f / gby_u:.3f}", "")
+
         B, T, H, hs = 2, 256, 8, 64
         r = jax.random.normal(jax.random.PRNGKey(1), (B, T, H, hs)) * 0.5
         k = jax.random.normal(jax.random.PRNGKey(2), (B, T, H, hs)) * 0.5
@@ -50,7 +119,12 @@ def main(quick: bool = True):
         emit("kernel_wkv6_naive_us", f"{us_naive:.0f}", f"T={T}")
         emit("kernel_wkv6_chunked_us", f"{us_chunk:.0f}",
              f"speedup={us_naive / max(us_chunk, 1e-9):.1f}x")
-        out = {"wkv_speedup": us_naive / max(us_chunk, 1e-9)}
+        out["wkv_speedup"] = us_naive / max(us_chunk, 1e-9)
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump({k: (round(v, 3) if isinstance(v, float) else v)
+                       for k, v in out.items()}, f, indent=2, sort_keys=True)
+        emit("kernelbench_json", out_path)
     return out
 
 

@@ -59,3 +59,62 @@ def decompress(payload, like, *, base=None):
 
 def payload_bytes(payload) -> int:
     return sum(np.asarray(l).nbytes for l in jax.tree.leaves(payload))
+
+
+# --------------------------------------------------------------------------- #
+# Decoded-model representation (zero-copy exchange path)
+# --------------------------------------------------------------------------- #
+
+# Exact keystr paths of the int8 store envelope ({"__method__", "n", "q",
+# "scales"} serialized through store.serialize_pytree). Exact-match lookups:
+# substring matching against keystr paths broke on models with a param
+# literally named ``q``.
+ENVELOPE_METHOD = "['__method__']"
+ENVELOPE_N = "['n']"
+ENVELOPE_Q = "['q']"
+ENVELOPE_SCALES = "['scales']"
+
+
+class DecodedModel:
+    """A peer model decoded from its store payload, kept in exchange form.
+
+    Quantized payloads stay as (q int8, per-tile scales) so the fused kernels
+    consume them without ever materializing the f32 vector; ``vec()``
+    dequantizes lazily and memoizes, so a model is dequantized at most once
+    per silo no matter how many scorers/aggregators touch it."""
+
+    __slots__ = ("n", "q", "scales", "_vec")
+
+    def __init__(self, n: int, *, q=None, scales=None, vec=None):
+        self.n = n
+        self.q = q
+        self.scales = scales
+        self._vec = vec
+
+    @property
+    def is_q8(self) -> bool:
+        return self.q is not None
+
+    def vec(self):
+        """Flat f32 [n] view of the model (dequantized once, then cached)."""
+        if self._vec is None:
+            self._vec = ops.dequantize(self.q, self.scales, self.n)
+        return self._vec
+
+
+def decode_flat(flat: Dict[str, np.ndarray]) -> DecodedModel:
+    """Store payload (keystr -> array dict) -> DecodedModel.
+
+    int8 envelopes keep their packed form; raw parameter payloads flatten to
+    one f32 vector (leaf order = jax tree flatten order, matching the
+    flatten spec of the receiving silo's params)."""
+    method = flat.get(ENVELOPE_METHOD)
+    if method is not None and str(np.asarray(method)) == "int8":
+        return DecodedModel(int(np.asarray(flat[ENVELOPE_N])),
+                            q=jnp.asarray(flat[ENVELOPE_Q]),
+                            scales=jnp.asarray(flat[ENVELOPE_SCALES]))
+    if not flat:
+        return DecodedModel(0, vec=jnp.zeros((0,), jnp.float32))
+    vec = jnp.concatenate([jnp.ravel(jnp.asarray(v)).astype(jnp.float32)
+                           for v in flat.values()])
+    return DecodedModel(int(vec.shape[0]), vec=vec)

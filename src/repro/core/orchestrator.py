@@ -24,13 +24,15 @@ import numpy as np
 
 from repro.config import FedConfig
 from repro.core import compression
+from repro.core.compression import decode_flat
 from repro.core.contract import UnifyFLContract
 from repro.core.ledger import Ledger
 from repro.core.policies import select_models
-from repro.core.scoring import make_scorer, multikrum_scores_for_round
+from repro.core.scoring import make_scorer, multikrum_scores_for_decoded
 from repro.core.simenv import SimEnv
 from repro.core.store import StoreNetwork, StoreNode
 from repro.fed.cluster import Cluster
+from repro.kernels import ops
 
 
 @dataclass
@@ -68,7 +70,7 @@ class SiloRuntime:
         self.scorer_fn = make_scorer(fed.scorer) if fed.scorer != "multikrum" \
             else make_scorer("accuracy")
         self._rng = random.Random(cluster.silo_id)
-        self._base_cache = None
+        self._flat_spec = None  # cached flatten spec of this config's params
 
     # ------------------------------------------------------------------ #
     @property
@@ -89,8 +91,23 @@ class SiloRuntime:
         self.alive = False
 
     # -- training ---------------------------------------------------------- #
+    def flat_spec(self):
+        """Flatten spec of this silo's params (derived once per config)."""
+        if self._flat_spec is None:
+            self._flat_spec = ops.make_flatten_spec(self.cluster.params)
+        return self._flat_spec
+
+    def get_decoded(self, cid: str) -> compression.DecodedModel:
+        """Pull a peer model via the store's decoded cache: fetched/decoded at
+        most once per silo, int8 payloads kept packed for the fused kernels."""
+        return self.store.get_decoded(cid, decode_flat)
+
     def pull_and_merge(self):
-        """Paper step 4-5: query orchestrator, pick models by policy, merge."""
+        """Paper step 4-5: query orchestrator, pick models by policy, merge.
+
+        Runs in flat-vector space: own params flatten against the cached
+        spec, quantized peers flow straight into the fused weighted-sum, and
+        the merged vector unflattens into ``cluster.params`` exactly once."""
         entries = self.contract.get_latest_models_with_scores(
             exclude_owner=self.silo_id)
         picked = select_models(entries, agg_policy=self.policy.agg_policy,
@@ -99,34 +116,18 @@ class SiloRuntime:
                                self_score=self.last_self_score, rng=self._rng)
         if not picked:
             return 0
-        peers = []
-        for c in picked:
-            payload = self.store.get(c.cid)  # may hit peers (IPFS pull)
-            peers.append(self._decode(payload))
+        peers = [self.get_decoded(c.cid) for c in picked]  # may hit IPFS peers
         weights = [1.0] * (1 + len(peers))
-        self.cluster.params = self.cluster.aggregator.apply_cross_silo(
-            self.cluster.params, peers, weights)
+        own_vec, _ = ops.flatten_pytree(self.cluster.params, self.flat_spec())
+        new_vec = self.cluster.aggregator.apply_cross_silo_vec(
+            own_vec, peers, weights)
+        self.cluster.params = ops.unflatten_pytree(new_vec, self.flat_spec())
         return len(peers)
-
-    def _decode(self, payload_dict):
-        """Store returns a flat keystr->array dict; rebuild against our params."""
-        like = self.cluster.params
-        method = _flat_get(payload_dict, "__method__")
-        if method is not None and str(np.asarray(method)) == "int8":
-            from repro.kernels import ops
-            vec = ops.dequantize(
-                jax.numpy.asarray(_flat_get(payload_dict, "'q'")),
-                jax.numpy.asarray(_flat_get(payload_dict, "scales")),
-                int(_flat_get(payload_dict, "'n'")))
-            _, spec = ops.flatten_pytree(like)
-            return ops.unflatten_pytree(vec, spec)
-        return _rebuild_like(like, payload_dict)
 
     def _encode(self):
         params = self.cluster.params
         if self.fed.compression == "int8":
-            from repro.kernels import ops
-            vec, _ = ops.flatten_pytree(params)
+            vec, _ = ops.flatten_pytree(params, self.flat_spec())
             q, s, n = ops.quantize(vec)
             return {"__method__": np.asarray("int8"), "q": np.asarray(q),
                     "scales": np.asarray(s), "n": np.asarray(n)}
@@ -164,8 +165,8 @@ class SiloRuntime:
         self.ledger.submit(self.silo_id, "set_busy", busy=True,
                            logical_time=self.env.now)
         t0 = time.perf_counter()
-        payload = self.store.get(cid)
-        params = self._decode(payload)
+        dm = self.get_decoded(cid)
+        params = ops.unflatten_pytree(dm.vec(), self.flat_spec())
         score = self.scorer_fn(self.cluster, params)
         compute = (time.perf_counter() - t0) * self.time_scale
         duration = compute + self.extra_score_delay
@@ -193,13 +194,6 @@ class SiloRuntime:
                                             {k: v for k, v in state.items()
                                              if k.startswith("['params']")})
         return state
-
-
-def _flat_get(flat: Dict[str, np.ndarray], name: str):
-    for k, v in flat.items():
-        if name in k:
-            return v
-    return None
 
 
 def _rebuild_like(like, flat: Dict[str, np.ndarray]):
@@ -309,15 +303,15 @@ class SyncOrchestrator(BaseOrchestrator):
 
     def _score_multikrum(self, r: int):
         """MultiKRUM operates on all models of the round at once (Sync-only,
-        paper Table 3)."""
+        paper Table 3). Models are pulled through the decoded cache and, when
+        the round is fully int8, scored by the fused gram_q8 kernel without
+        materializing any f32 [M, N] stack."""
         entries = self.contract.get_round_models(r)
         if len(entries) < 2:
             return
-        models = []
-        for e in entries:
-            silo0 = self.silos[0]
-            models.append(silo0._decode(silo0.store.get(e.cid)))
-        scores = multikrum_scores_for_round(models, self.fed.multikrum_m)
+        silo0 = self.silos[0]
+        decoded = [silo0.get_decoded(e.cid) for e in entries]
+        scores = multikrum_scores_for_decoded(decoded, self.fed.multikrum_m)
         for e, sc in zip(entries, scores):
             for sid in e.assigned:
                 self.ledger.submit(sid, "submit_score", cid=e.cid,

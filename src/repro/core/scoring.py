@@ -33,10 +33,28 @@ def multikrum_scores_for_round(models: Sequence, m: int) -> List[float]:
 
     models: list of parameter pytrees. m: neighbourhood size (paper's f-derived
     parameter; we expose it directly)."""
-    vecs = [ops.flatten_pytree(p)[0] for p in models]
-    x = jnp.stack(vecs)
+    x, _ = ops.flatten_batch(models)
     scores = ops.multikrum_scores(x, m)
     return [-float(s) for s in scores]  # negate: lower distance sum = better
+
+
+def multikrum_scores_for_decoded(decoded: Sequence, m: int) -> List[float]:
+    """MultiKRUM over a round's ``DecodedModel``s (higher = better).
+
+    When every model arrived int8-packed with one padded length — the normal
+    case under ``compression='int8'`` — the Gram matrix is accumulated
+    straight off the packed payloads by the fused ``gram_q8`` kernel: no f32
+    [M, N] materialization, ~1/9 the HBM traffic. Mixed or uncompressed
+    rounds fall back to the f32 kernel on the (cached) dequantized vectors."""
+    if (all(d.is_q8 for d in decoded)
+            and len({int(d.q.shape[0]) for d in decoded}) == 1):
+        q = jnp.stack([d.q for d in decoded])
+        s = jnp.stack([d.scales for d in decoded])
+        scores = ops.multikrum_scores_q8(q, s, m)
+    else:
+        x = jnp.stack([d.vec() for d in decoded])
+        scores = ops.multikrum_scores(x, m)
+    return [-float(v) for v in scores]
 
 
 def multikrum_sketched(models: Sequence, m: int, *, sketch_dim: int = 4096,

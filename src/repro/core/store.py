@@ -16,12 +16,14 @@ import hashlib
 import json
 import os
 import threading
-from typing import Any, Dict, List, Optional, Tuple
+from collections import OrderedDict
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 CHUNK_BYTES = 1 << 20  # 1 MiB blocks, IPFS-style
+DECODED_CACHE_MAX = 64  # CIDs kept in each node's decoded-model cache
 
 
 # --------------------------------------------------------------------------- #
@@ -86,8 +88,10 @@ class StoreNode:
         self._pins: set = set()
         self._peers: List["StoreNode"] = []
         self._lock = threading.Lock()
+        self._decoded: "OrderedDict[str, Any]" = OrderedDict()
         self.stats = {"puts": 0, "gets": 0, "peer_fetches": 0,
-                      "bytes_stored": 0, "bytes_fetched": 0}
+                      "bytes_stored": 0, "bytes_fetched": 0,
+                      "decodes": 0, "decode_hits": 0}
         if root:
             os.makedirs(root, exist_ok=True)
 
@@ -143,6 +147,33 @@ class StoreNode:
 
     def get(self, cid: str, like=None):
         return deserialize_pytree(self.get_bytes(cid), like)
+
+    def get_decoded(self, cid: str, decoder: Callable):
+        """Zero-copy exchange: fetch + ``decoder(payload)`` once per CID.
+
+        Content addressing makes blocks immutable, so the decoded form (e.g.
+        the unpacked int8 vector of a peer model) is safely cached: a model
+        pulled by k scorers and then re-pulled for aggregation is
+        deserialized exactly once on this node (``stats['decodes']``); the
+        other k-1+ touches are ``stats['decode_hits']``. Bounded LRU."""
+        with self._lock:
+            if cid in self._decoded:
+                self.stats["decode_hits"] += 1
+                self._decoded.move_to_end(cid)
+                return self._decoded[cid]
+        obj = decoder(self.get(cid))
+        with self._lock:
+            # decode ran unlocked: a concurrent miss may have won the race —
+            # keep its object so all callers share one decoded model
+            if cid in self._decoded:
+                self.stats["decode_hits"] += 1
+                self._decoded.move_to_end(cid)
+                return self._decoded[cid]
+            self.stats["decodes"] += 1
+            self._decoded[cid] = obj
+            while len(self._decoded) > DECODED_CACHE_MAX:
+                self._decoded.popitem(last=False)
+        return obj
 
     def pin(self, cid: str):
         self._pins.add(cid)

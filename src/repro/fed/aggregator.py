@@ -1,13 +1,18 @@
 """Silo-level aggregation: FedAvg over client weights + the FedOpt family for
-applying cross-silo deltas (paper Table 5 mixes FedAvg and FedYogi silos)."""
+applying cross-silo deltas (paper Table 5 mixes FedAvg and FedYogi silos).
+
+The cross-silo merge runs in flat-vector space end-to-end: peer models arrive
+as ``DecodedModel``s (possibly still int8-packed), quantized peers flow
+through the fused ``wsum_q8`` kernel without ever materializing as f32, and
+the caller unflattens the merged vector back into its params exactly once."""
 from __future__ import annotations
 
 from typing import List, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.compression import DecodedModel
 from repro.kernels import ops
 from repro.optim.fedopt import ServerOptimizer, make_server_optimizer
 
@@ -16,18 +21,9 @@ def fedavg_params(params_list: Sequence, weights: Sequence[float]):
     """Sample-count-weighted average of parameter pytrees (kernel-backed)."""
     w = np.asarray(weights, np.float64)
     w = (w / w.sum()).astype(np.float32)
-    vecs, spec = _stack(params_list)
+    vecs, spec = ops.flatten_batch(params_list)
     agg = ops.weighted_sum(vecs, jnp.asarray(w))
     return ops.unflatten_pytree(agg, spec)
-
-
-def _stack(params_list):
-    vec0, spec = ops.flatten_pytree(params_list[0])
-    vecs = [vec0]
-    for p in params_list[1:]:
-        v, _ = ops.flatten_pytree(p)
-        vecs.append(v)
-    return jnp.stack(vecs), spec
 
 
 class SiloAggregator:
@@ -45,16 +41,48 @@ class SiloAggregator:
         weights = [r[1] for r in results]
         return fedavg_params(params_list, weights)
 
-    def apply_cross_silo(self, own_params, peer_params: List, weights: List[float]):
-        """Merge selected peer models into own: server-opt on the delta."""
-        if not peer_params:
-            return own_params
-        mixed = fedavg_params([own_params] + peer_params,
-                              [weights[0]] + list(weights[1:]))
-        delta = jax.tree.map(lambda a, b: a.astype(jnp.float32)
-                             - b.astype(jnp.float32), mixed, own_params)
+    def apply_cross_silo_vec(self, own_vec, peers: List[DecodedModel],
+                             weights: List[float]):
+        """Merge peer models into the silo's flat f32 vector [n].
+
+        weights[0] is the self-weight; weights[1:] align with ``peers``.
+        int8 peers are grouped by padded length and consumed by one fused
+        kernel call per group; f32 peers add their (cached) vectors."""
+        if not peers:
+            return own_vec
+        w = np.asarray(weights, np.float64)
+        w = (w / w.sum()).astype(np.float32)
+        n = int(own_vec.shape[0])
+        mixed = w[0] * own_vec
+        groups: dict = {}
+        f32_peers = []
+        for wi, p in zip(w[1:], peers):
+            if p.is_q8:
+                groups.setdefault(int(p.q.shape[0]), []).append((wi, p))
+            else:
+                f32_peers.append((wi, p))
+        for grp in groups.values():
+            q = jnp.stack([p.q for _, p in grp])
+            s = jnp.stack([p.scales for _, p in grp])
+            gw = jnp.asarray(np.asarray([wi for wi, _ in grp], np.float32))
+            mixed = mixed + ops.weighted_sum_q8(q, s, gw, n)
+        for wi, p in f32_peers:
+            mixed = mixed + wi * p.vec()[:n]
+        delta = mixed - own_vec
         if self._opt_state is None:
-            self._opt_state = self.server_opt.init(own_params)
-        new, self._opt_state = self.server_opt.apply(own_params, delta,
+            self._opt_state = self.server_opt.init(own_vec)
+        new, self._opt_state = self.server_opt.apply(own_vec, delta,
                                                      self._opt_state)
         return new
+
+    def apply_cross_silo(self, own_params, peer_params: List,
+                         weights: List[float]):
+        """Pytree-facing wrapper over the flat-vector merge."""
+        if not peer_params:
+            return own_params
+        spec = ops.make_flatten_spec(own_params)
+        own_vec, _ = ops.flatten_pytree(own_params, spec)
+        peers = [DecodedModel(int(v.shape[0]), vec=v)
+                 for v, _ in (ops.flatten_pytree(p, spec) for p in peer_params)]
+        new_vec = self.apply_cross_silo_vec(own_vec, peers, weights)
+        return ops.unflatten_pytree(new_vec, spec)

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import multikrum as _mk
+from repro.kernels import q8agg as _q8
 from repro.kernels import quant as _q
 from repro.kernels import ref as _ref
 from repro.kernels import rwkv6 as _rwkv
@@ -38,13 +39,44 @@ def _pad_to(x, axis: int, multiple: int, value=0.0):
 # Flatten helpers (model pytree <-> single vector)
 # --------------------------------------------------------------------------- #
 
-def flatten_pytree(params):
-    """Pytree -> (vector f32 [N], treedef+shapes for unflatten)."""
+_SPEC_CACHE: dict = {}
+
+
+def make_flatten_spec(params):
+    """Derive (and cache) the flatten spec for a pytree's config: one spec per
+    (structure, shapes, dtypes) — the round-critical path flattens/unflattens
+    against it every round without re-deriving leaf metadata."""
     leaves, treedef = jax.tree_util.tree_flatten(params)
-    shapes = [(l.shape, l.dtype) for l in leaves]
+    key = (treedef, tuple((tuple(l.shape), np.dtype(l.dtype)) for l in leaves))
+    spec = _SPEC_CACHE.get(key)
+    if spec is None:
+        spec = (treedef, [(l.shape, l.dtype) for l in leaves])
+        _SPEC_CACHE[key] = spec
+    return spec
+
+
+def flatten_pytree(params, spec=None):
+    """Pytree -> (vector f32 [N], treedef+shapes for unflatten)."""
+    if spec is None:
+        spec = make_flatten_spec(params)
+    leaves = jax.tree_util.tree_leaves(params)
     vec = jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in leaves]) \
         if leaves else jnp.zeros((0,), jnp.float32)
-    return vec, (treedef, shapes)
+    return vec, spec
+
+
+def flatten_batch(params_list, spec=None):
+    """M pytrees of one config -> ([M, N] f32, spec) in a single batched
+    flatten: per-leaf stack across models, one concatenate along N (replaces
+    the per-model python re-flatten loop on the aggregation hot path)."""
+    if spec is None:
+        spec = make_flatten_spec(params_list[0])
+    rows = [jax.tree_util.tree_leaves(p) for p in params_list]
+    if not rows[0]:
+        return jnp.zeros((len(rows), 0), jnp.float32), spec
+    cols = [jnp.stack([jnp.ravel(r[i]).astype(jnp.float32) for r in rows])
+            for i in range(len(rows[0]))]
+    return jnp.concatenate(cols, axis=1), spec
 
 
 def unflatten_pytree(vec, spec):
@@ -94,6 +126,52 @@ def weighted_sum(x, w, force: str = "auto"):
     N = x.shape[1]
     xp = _pad_to(x, 1, _ws.TILE_N)
     return _ws.weighted_sum(xp, w, interpret=_interpret())[:N]
+
+
+# --------------------------------------------------------------------------- #
+# Fused int8-native aggregation (quantized models never materialize as f32)
+# --------------------------------------------------------------------------- #
+
+QTILE = _q.TILE  # scale granularity of the quantized payload
+
+
+def _pad_q8(q, scales):
+    """Pad [M, Np] int8 + [M, Np/QTILE] scales to the kernel block width.
+    Zero-padded q contributes nothing regardless of the padded scale."""
+    return (_pad_to(q, q.ndim - 1, _q8.TILE_N),
+            _pad_to(scales, scales.ndim - 1, _q8.QPB))
+
+
+def weighted_sum_q8(q, scales, w, n: int = None, force: str = "auto"):
+    """Fused dequantize + weighted sum. q: [M, Np] int8 (Np % QTILE == 0),
+    scales: [M, Np/QTILE], w: [M] -> [n] f32 (n defaults to Np)."""
+    M, Np = q.shape
+    assert Np % QTILE == 0, f"quantized payload must be {QTILE}-aligned"
+    n = Np if n is None else n
+    if force == "ref":
+        return _ref.wsum_q8(q, scales, w, QTILE)[:n]
+    qp, sp = _pad_q8(q, scales)
+    return _q8.wsum_q8(qp, sp, w, interpret=_interpret())[:n]
+
+
+def pairwise_dists_q8(q, scales, force: str = "auto"):
+    """Fused dequantize + pairwise squared L2 of quantized models [M, M]."""
+    if force == "ref":
+        g, sq = _ref.gram_q8(q, scales, QTILE)
+    else:
+        qp, sp = _pad_q8(q, scales)
+        g, sq = _q8.gram_q8(qp, sp, interpret=_interpret())
+    d = sq + sq.T - 2.0 * g
+    return jnp.maximum(d, 0.0)
+
+
+def multikrum_scores_q8(q, scales, m: int, force: str = "auto"):
+    """MultiKRUM scores straight off the int8 payloads (lower = better)."""
+    d = pairwise_dists_q8(q, scales, force)
+    M = d.shape[0]
+    d = d + jnp.diag(jnp.full((M,), jnp.inf))
+    m = min(m, M - 1)
+    return jnp.sum(jnp.sort(d, axis=1)[:, :m], axis=1)
 
 
 # --------------------------------------------------------------------------- #

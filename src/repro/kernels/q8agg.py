@@ -1,0 +1,109 @@
+"""Pallas kernels: int8-native fused aggregation (quantized exchange hot path).
+
+The cross-silo round moves M peer models of flattened length N as int8
+payloads (symmetric per-tile quantization, ``kernels/quant.py``). The seed
+pipeline dequantized them to f32 and only then ran the weighted-sum /
+MultiKRUM-Gram kernels — one extra f32 materialization of the whole [M, N]
+set, 4x the HBM traffic of the int8 bytes that actually arrived.
+
+These kernels consume the packed int8 blocks plus their per-tile scales
+directly, fusing dequantization into the accumulation:
+
+  wsum_q8:  out[n]  = sum_m w[m] * s[m, n // QT] * q[m, n]
+            The per-tile scale folds into the weight vector, so the MXU
+            contraction runs straight off the int8 block in VMEM.
+  gram_q8:  G[i, j] = sum_n (s q)[i, n] * (s q)[j, n]
+            Per quant tile, q @ q.T is an int8 x int8 -> int32 MXU matmul
+            (exact: |sum| <= 127^2 * QT < 2^31); scales apply once per
+            [M, M] tile as the rank-1 factor s s^T.
+
+HBM traffic per round drops from (1 + 4 + 4) * M * N bytes (read int8, write
+f32, re-read f32) to ~1.004 * M * N (int8 + scales), one pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import quant as _q
+
+QT = _q.TILE          # quantization tile (scale granularity), 1024
+QPB = 4               # quant tiles per VMEM block
+TILE_N = QPB * QT     # kernel block width along N
+
+
+def _wsum_kernel(w_ref, q_ref, s_ref, o_ref):
+    """w_ref: [1, M] f32; q_ref: [M, TILE_N] int8; s_ref: [M, QPB] f32."""
+    w = w_ref[0, :]
+    for k in range(QPB):
+        ws = (w * s_ref[:, k])[None, :]                      # [1, M]
+        qf = q_ref[:, k * QT:(k + 1) * QT].astype(jnp.float32)
+        o_ref[:, k * QT:(k + 1) * QT] = jax.lax.dot_general(
+            ws, qf, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wsum_q8(q, scales, w, *, interpret: bool = False):
+    """q: [M, N] int8 (N % TILE_N == 0); scales: [M, N/QT]; w: [M] -> [N] f32."""
+    M, N = q.shape
+    assert N % TILE_N == 0, f"pad N to a multiple of {TILE_N}"
+    assert scales.shape == (M, N // QT), scales.shape
+    grid = (N // TILE_N,)
+    out = pl.pallas_call(
+        _wsum_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, M), lambda i: (0, 0)),
+                  pl.BlockSpec((M, TILE_N), lambda i: (0, i)),
+                  pl.BlockSpec((M, QPB), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, TILE_N), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, N), jnp.float32),
+        interpret=interpret,
+    )(w.astype(jnp.float32)[None, :], q, scales)
+    return out[0]
+
+
+def _gram_kernel(q_ref, s_ref, g_ref, sq_ref):
+    """q_ref: [M, TILE_N] int8; s_ref: [M, QPB]; accumulates G [M,M], sq [M,1]."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        sq_ref[...] = jnp.zeros_like(sq_ref)
+
+    for k in range(QPB):
+        qi = q_ref[:, k * QT:(k + 1) * QT]
+        s = s_ref[:, k:k + 1]                                # [M, 1]
+        # int8 x int8 -> int32 contraction over one quant tile is exact
+        gq = jax.lax.dot_general(
+            qi, qi, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32).astype(jnp.float32)
+        g_ref[...] += (s * s.T) * gq
+        qsq = jnp.sum(qi.astype(jnp.int32) * qi.astype(jnp.int32),
+                      axis=1, keepdims=True).astype(jnp.float32)
+        sq_ref[...] += (s * s) * qsq
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gram_q8(q, scales, *, interpret: bool = False):
+    """q: [M, N] int8 (N % TILE_N == 0); scales: [M, N/QT]
+    -> (G [M, M] f32, sq [M, 1] f32) of the dequantized models."""
+    M, N = q.shape
+    assert N % TILE_N == 0, f"pad N to a multiple of {TILE_N}"
+    assert scales.shape == (M, N // QT), scales.shape
+    grid = (N // TILE_N,)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((M, TILE_N), lambda i: (0, i)),
+                  pl.BlockSpec((M, QPB), lambda i: (0, i))],
+        out_specs=[pl.BlockSpec((M, M), lambda i: (0, 0)),
+                   pl.BlockSpec((M, 1), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((M, M), jnp.float32),
+                   jax.ShapeDtypeStruct((M, 1), jnp.float32)],
+        interpret=interpret,
+    )(q, scales)

@@ -46,6 +46,27 @@ def dequantize_int8(q, scales, tile: int = 1024):
     return (qt * scales[:, None]).reshape(-1)
 
 
+def dequantize_rows(q, scales, tile: int = 1024):
+    """q: [M, N] int8, scales: [M, N/tile] -> [M, N] f32."""
+    M, N = q.shape
+    qt = q.reshape(M, N // tile, tile).astype(jnp.float32)
+    return (qt * scales[:, :, None]).reshape(M, N)
+
+
+def wsum_q8(q, scales, w, tile: int = 1024):
+    """Oracle for the fused int8 weighted sum: dequantize, then weighted_sum.
+    q: [M, N] int8, scales: [M, N/tile], w: [M] -> [N] f32."""
+    x = dequantize_rows(q, scales, tile)
+    return jnp.einsum("m,mn->n", w.astype(jnp.float32), x)
+
+
+def gram_q8(q, scales, tile: int = 1024):
+    """Oracle for the fused int8 Gram: dequantize, then X X^T + row norms.
+    -> (G [M, M] f32, sq [M, 1] f32)."""
+    x = dequantize_rows(q, scales, tile)
+    return x @ x.T, jnp.sum(x * x, axis=1, keepdims=True)
+
+
 def wkv6_naive(r, k, v, w, u, state):
     """Token-by-token WKV6 recurrence (oracle for the chunked kernel).
 
