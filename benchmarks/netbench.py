@@ -1,0 +1,183 @@
+"""Store-network WAN benchmark: what does storage *cost* per round?
+
+Runs the paper CNN federation over the simulated fabric and reports, per
+scenario, the simulated round wall-clock plus fabric/store accounting:
+
+  * ``sync`` vs ``async`` under ``lan`` vs ``wan-heterogeneous`` — the
+    paper's §4.2.4 sync/async trade-off, now with visible transfer cost;
+  * async WAN with vs without the decoded-cache prefetcher — the ROADMAP
+    lever: announced CIDs pulled during the training window so the next
+    pull-and-merge is warm (acceptance: prefetch reduces wall-clock and its
+    decoded-cache hit rate is > 0);
+  * a partitioned-origin churn scenario — the round completes via gossip
+    replica failover, with the rerouted fetch visible in the fabric trace.
+
+Silos get fixed, staggered simulated train windows (``extra_train_delay``)
+and ``time_scale=0``, so the simulated clock is a *pure function* of the
+modeled windows and transfer times: every number below is bit-reproducible
+across hosts and runs (host compute still executes, it just contributes no
+simulated time — the windows model it). Results land in ``BENCH_net.json``
+(``--quick`` keeps sizes inside the tier-1 budget; the schema and acceptance
+invariants are asserted by ``tests/test_netbench_schema.py``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, Optional, Tuple
+
+from benchmarks.common import CNN, emit, timed
+from repro.config import FaultScenario, FedConfig, NetConfig
+from repro.core.builder import SiloSpec, build_image_experiment
+
+TRAIN_WINDOW_S = 1.0    # base simulated local-training window per silo
+STAGGER_S = 0.05        # per-silo window increment (heterogeneous fleets)
+TIME_SCALE = 0.0        # sim clock independent of host compute => exact repro
+
+
+def _fed(mode: str, net: Optional[NetConfig], *, silos: int, rounds: int,
+         round_deadline_s: float = 0.0, scorer_deadline_s: float = 0.0
+         ) -> FedConfig:
+    return FedConfig(n_silos=silos, clients_per_silo=1, rounds=rounds,
+                     local_epochs=1, mode=mode, scorer="accuracy",
+                     agg_policy="all", score_policy="median",
+                     round_deadline_s=round_deadline_s,
+                     scorer_deadline_s=scorer_deadline_s, net=net)
+
+
+def _run(fed: FedConfig, *, n_train: int, n_test: int, seed: int = 0,
+         silo_specs=None):
+    orch = build_image_experiment(CNN, fed, n_train=n_train, n_test=n_test,
+                                  silo_specs=silo_specs, seed=seed)
+    for s in orch.silos:
+        s.time_scale = TIME_SCALE
+    orch.run(fed.rounds)
+    return orch
+
+
+def _store_totals(orch) -> Dict[str, float]:
+    keys = ("bytes_in", "bytes_out", "fetch_time", "replica_hits",
+            "prefetch_hits", "decode_hits", "decodes")
+    return {k: sum(s.store.stats[k] for s in orch.silos) for k in keys}
+
+
+def _scenario_row(orch, fed: FedConfig) -> Dict:
+    """``wall_clock_s`` is the protocol round wall-clock: Sync rounds end
+    when the engine finalizes them (env.now); Async rounds end when the last
+    silo submits its final round — transfers still in flight at that point
+    (end-of-run prefetch/score drain) serve a round that never happens, so
+    they count into ``drained_wall_clock_s`` only."""
+    last_submit = max((m["t"] for s in orch.silos for m in s.metrics),
+                      default=0.0)
+    row = {"wall_clock_s": orch.env.now if fed.mode == "sync" else last_submit,
+           "drained_wall_clock_s": orch.env.now,
+           "net": dict(orch.fabric.stats) if orch.fabric else None,
+           "store": _store_totals(orch),
+           "prefetch": (orch.prefetcher.hit_stats()
+                        if orch.prefetcher else None)}
+    row["wall_clock_per_round_s"] = row["wall_clock_s"] / fed.rounds
+    return row
+
+
+def run_grid(quick: bool) -> Tuple[Dict, float]:
+    """sync/async x lan/wan-heterogeneous (+ async wan without prefetch)."""
+    silos = 5           # > 4 so scorer sampling leaves cold CIDs to prefetch
+    # >= 3 rounds: a prefetch issued at round r's announce lands during the
+    # next training window and pays off at round r+1's pull-and-merge
+    rounds = 3 if quick else 5
+    n_train = 400 if quick else 1500
+    n_test = 160 if quick else 400
+    specs = lambda: [SiloSpec(extra_train_delay=TRAIN_WINDOW_S
+                              + STAGGER_S * (i - 2))
+                     for i in range(silos)]
+
+    out: Dict[str, Dict] = {}
+    for mode in ("sync", "async"):
+        for preset in ("lan", "wan-heterogeneous"):
+            net = NetConfig(preset=preset, replication_factor=1,
+                            prefetch=True)
+            fed = _fed(mode, net, silos=silos, rounds=rounds)
+            orch = _run(fed, n_train=n_train, n_test=n_test,
+                        silo_specs=specs())
+            name = f"{mode}_{preset}"
+            out[name] = _scenario_row(orch, fed)
+            emit(f"net_{name}_wall_s",
+                 f"{out[name]['wall_clock_s']:.3f}",
+                 f"fetch_time={out[name]['store']['fetch_time']:.3f}s")
+
+    # the prefetch lever, isolated: async WAN with the prefetcher off
+    net = NetConfig(preset="wan-heterogeneous", replication_factor=1,
+                    prefetch=False)
+    fed = _fed("async", net, silos=silos, rounds=rounds)
+    orch = _run(fed, n_train=n_train, n_test=n_test, silo_specs=specs())
+    out["async_wan-heterogeneous_noprefetch"] = _scenario_row(orch, fed)
+
+    with_pf = out["async_wan-heterogeneous"]["wall_clock_s"]
+    without_pf = out["async_wan-heterogeneous_noprefetch"]["wall_clock_s"]
+    speedup = without_pf / with_pf if with_pf > 0 else 0.0
+    emit("net_async_prefetch_speedup", f"{speedup:.3f}",
+         f"{without_pf:.3f}s -> {with_pf:.3f}s")
+    hit_rate = out["async_wan-heterogeneous"]["prefetch"]["hit_rate"]
+    emit("net_prefetch_hit_rate", f"{hit_rate:.3f}",
+         "decoded-cache hits / prefetches landed")
+    return out, speedup
+
+
+def run_failover(quick: bool) -> Dict:
+    """Origin silo churns out between submit and scoring; gossip replica
+    serves the rerouted fetches and the round still finalizes."""
+    rounds = 2
+    # silo0 submits early so its gossip replica lands before scoring opens
+    specs = [SiloSpec(extra_train_delay=0.2),
+             SiloSpec(extra_train_delay=TRAIN_WINDOW_S + 0.1),
+             SiloSpec(extra_train_delay=TRAIN_WINDOW_S + 0.1)]
+    scenario = FaultScenario(action="down", node="silo0", round=rounds,
+                             when="score")
+    net = NetConfig(preset="wan-heterogeneous", replication_factor=1,
+                    prefetch=False, scenarios=(scenario,))
+    fed = _fed("sync", net, silos=3, rounds=rounds, scorer_deadline_s=2.0)
+    orch = _run(fed, n_train=300 if quick else 900,
+                n_test=120 if quick else 300, seed=1, silo_specs=specs)
+    reroutes = sum(1 for r in orch.fabric.trace if r.kind == "reroute")
+    last = {e.owner: e for e in orch.contract.get_round_models(rounds)}
+    scored = "silo0" in last and bool(last["silo0"].scores)
+    completed = all(s.rounds_done == rounds for s in orch.silos if s.alive) \
+        and orch.ledger.verify()
+    emit("net_failover_reroutes", reroutes,
+         f"origin down, round completed={completed}, "
+         f"dead origin's model scored={scored}")
+    return {"reroutes": reroutes, "origin_model_scored": scored,
+            "completed": completed,
+            "cancelled_inflight": orch.fabric.stats["cancelled"]}
+
+
+def main(quick: bool = True, out_path: str = "BENCH_net.json") -> Dict:
+    with timed("netbench"):
+        grid, speedup = run_grid(quick)
+        failover = run_failover(quick)
+    out = {
+        "quick": quick,
+        "config": {"train_window_s": TRAIN_WINDOW_S,
+                   "time_scale": TIME_SCALE, "model": CNN.arch_id},
+        "scenarios": grid,
+        "async_prefetch_speedup": speedup,
+        "prefetch_hit_rate":
+            grid["async_wan-heterogeneous"]["prefetch"]["hit_rate"],
+        "failover": failover,
+    }
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    ok = (speedup > 1.0 and out["prefetch_hit_rate"] > 0
+          and failover["reroutes"] >= 1 and failover["completed"])
+    emit("net_acceptance", "PASS" if ok else "FAIL",
+         "prefetch speeds up async WAN, hit rate > 0, failover rerouted")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="tier-1 sized run (small data, 2 rounds)")
+    ap.add_argument("--out", default="BENCH_net.json")
+    args = ap.parse_args()
+    main(quick=args.quick, out_path=args.out)

@@ -9,8 +9,9 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks import (fig7_byzantine, kernelbench, roofline, table1_collab,
-                        table5_runs, table6_edge, table7_overhead)
+from benchmarks import (fig7_byzantine, kernelbench, netbench, roofline,
+                        table1_collab, table5_runs, table6_edge,
+                        table7_overhead)
 
 BENCHES = {
     "table1": table1_collab.main,     # No-Collab vs Collab (paper Table 1)
@@ -19,6 +20,7 @@ BENCHES = {
     "table7": table7_overhead.main,   # system overhead (Table 7)
     "fig7": fig7_byzantine.main,      # byzantine policies (Figure 7)
     "kernels": kernelbench.main,      # paper hot-spot kernels
+    "net": netbench.main,             # store-network WAN fabric scenarios
     "roofline": roofline.main,        # dry-run roofline table (§Roofline)
 }
 

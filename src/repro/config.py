@@ -223,6 +223,39 @@ AGG_POLICIES = ("all", "self", "random_k", "top_k", "above_average",
 SCORE_POLICIES = ("median", "mean", "min", "max")
 SCORERS = ("accuracy", "multikrum", "loss")
 
+NET_PRESETS = ("lan", "wan-uniform", "wan-heterogeneous", "paper-testbed")
+
+
+@dataclass(frozen=True)
+class FaultScenario:
+    """One injectable network fault (interpreted by repro.net.faults).
+
+    Fire either round-phased (``round`` + ``when``, Sync engine) or at an
+    absolute simulated time (``at_time`` >= 0, both engines)."""
+    action: str                  # 'down' | 'up' | 'isolate' | 'heal' | 'slow_link'
+    node: str = ""
+    node_b: str = ""             # second endpoint for 'slow_link'
+    factor: float = 1.0          # bandwidth divisor for 'slow_link'
+    round: int = 0               # sync-engine round trigger (ignored if < 1)
+    when: str = "train"          # 'train' (round start) | 'score' (pre-scoring)
+    at_time: float = -1.0        # absolute sim-time trigger (ignored if < 0)
+
+
+@dataclass(frozen=True)
+class NetConfig:
+    """Simulated WAN fabric under the store network (repro.net).
+
+    Transfer time is pure simulated seconds — it composes *additively* with
+    compute durations (which are real measured seconds x ``time_scale``);
+    time_scale does not rescale network time."""
+    preset: str = "wan-uniform"        # one of NET_PRESETS
+    seed: int = 0                      # link-tier + jitter randomness
+    chunk_bytes: int = 1 << 20         # IPFS-style block granularity
+    replication_factor: int = 1        # gossip replicas per announced CID
+    prefetch: bool = True              # warm decoded caches during training
+    prefetch_delay_s: float = 0.0      # lag between announce and prefetch pull
+    scenarios: Tuple[FaultScenario, ...] = ()
+
 
 @dataclass(frozen=True)
 class FedConfig:
@@ -244,6 +277,8 @@ class FedConfig:
     # compression of exchanged models (beyond-paper)
     compression: str = "none"          # 'none' | 'int8' | 'topk'
     topk_frac: float = 0.01
+    # simulated store-network fabric; None = instantaneous in-memory store
+    net: Optional[NetConfig] = None
 
 
 @dataclass(frozen=True)

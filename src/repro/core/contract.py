@@ -21,6 +21,7 @@ reassignment extend the paper's design to node-failure handling.
 """
 from __future__ import annotations
 
+import hashlib
 import random
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Set
@@ -132,8 +133,12 @@ class UnifyFLContract:
     def _sample_scorers(self, entry: ModelEntry, blk, pool: List[str]) -> List[str]:
         n = len(self.aggregators)
         need = n // 2 + 1  # the paper's de-biasing majority
+        # block-hash ^ cid-digest randomness: fully on-chain deterministic
+        # (Python's str hash is per-process salted — unusable in a contract)
+        cid_digest = int.from_bytes(
+            hashlib.sha256(entry.cid.encode()).digest()[:8], "big")
         rng = random.Random((int(blk.hash[:16], 16) if blk else 0)
-                            ^ hash(entry.cid) & 0xFFFFFFFF)
+                            ^ cid_digest)
         pool = sorted(pool)
         rng.shuffle(pool)
         return pool[:need]

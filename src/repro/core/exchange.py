@@ -40,6 +40,22 @@ except Exception:  # pragma: no cover
     from jax.experimental.shard_map import shard_map  # type: ignore
 
 
+def _pod_manual_shard_map(f, mesh, in_specs, out_specs):
+    """shard_map manual over 'pod' with the replication/VMA check off.
+
+    jax >= 0.5 takes ``axis_names``/``check_vma`` and stays auto over the
+    other mesh axes. jax 0.4.x partial-auto shard_map miscompiles
+    differentiated scan bodies (XLA `IsManualSubgroup` CHECK), so there we go
+    fully manual: in_specs only split 'pod', leaving data/model replicated —
+    pod-axis collectives (the thing under test) are unchanged."""
+    try:
+        return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                         axis_names={"pod"}, check_vma=False)
+    except TypeError:
+        return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                         check_rep=False)
+
+
 @dataclass(frozen=True)
 class ExchangeConfig:
     policy: str = "top_k"          # 'all' | 'self' | 'top_k' | 'above_average'
@@ -132,10 +148,15 @@ def _sketch(params, dim: int):
     return acc / jnp.sqrt(jnp.float32(len(leaves)))
 
 
-def exchange(params, score_fn: Callable, score_batch, cfg: ExchangeConfig):
+def exchange(params, score_fn: Callable, score_batch, cfg: ExchangeConfig,
+             n_pods: Optional[int] = None):
     """Inside shard_map manual over 'pod'. params: silo-local pytree.
-    score_fn(params, batch) -> scalar loss. Returns merged params."""
-    n = lax.axis_size("pod")
+    score_fn(params, batch) -> scalar loss. Returns merged params.
+
+    ``n_pods`` is the static pod-axis size; callers that know their mesh pass
+    it (jax 0.4.x has no ``lax.axis_size`` to recover it in-trace)."""
+    n = n_pods if n_pods is not None \
+        else lax.axis_size("pod")  # jax >= 0.5 only
     my_idx = lax.axis_index("pod")
     if cfg.policy == "self" or n == 1:
         return params
@@ -238,17 +259,16 @@ def make_unifyfl_round_step(model: Model, mesh, ex_cfg: ExchangeConfig,
             new_params, metrics = train_step(params, batch)
             score_fn = lambda p, b: model.loss(p, b)[0]
             score_batch = jax.tree.map(lambda x: x[:ex_cfg.score_batch], batch)
-            merged = exchange(new_params, score_fn, score_batch, ex_cfg)
+            merged = exchange(new_params, score_fn, score_batch, ex_cfg,
+                              n_pods=int(mesh.shape["pod"]))
             out = jax.tree.map(lambda x: x[None], merged)
             loss = metrics["loss"][None]
         return out, loss
 
     def round_step(params_stacked, batch_stacked):
-        return shard_map(
-            per_pod, mesh=mesh,
-            in_specs=(P("pod"), P("pod")),
-            out_specs=(P("pod"), P("pod")),
-            axis_names={"pod"}, check_vma=False,
+        return _pod_manual_shard_map(
+            per_pod, mesh,
+            (P("pod"), P("pod")), (P("pod"), P("pod")),
         )(params_stacked, batch_stacked)
 
     return round_step
@@ -277,19 +297,15 @@ def make_pod_serve_step(model: Model, mesh, kind: str):
 
     if kind == "decode":
         def serve_step(params_stacked, batch_stacked, cache_stacked):
-            return shard_map(
-                per_pod_decode, mesh=mesh,
-                in_specs=(P("pod"), P("pod"), P("pod")),
-                out_specs=(P("pod"), P("pod")),
-                axis_names={"pod"}, check_vma=False,
+            return _pod_manual_shard_map(
+                per_pod_decode, mesh,
+                (P("pod"), P("pod"), P("pod")), (P("pod"), P("pod")),
             )(params_stacked, batch_stacked, cache_stacked)
     else:
         def serve_step(params_stacked, batch_stacked):
-            return shard_map(
-                per_pod_prefill, mesh=mesh,
-                in_specs=(P("pod"), P("pod")),
-                out_specs=(P("pod"), P("pod")),
-                axis_names={"pod"}, check_vma=False,
+            return _pod_manual_shard_map(
+                per_pod_prefill, mesh,
+                (P("pod"), P("pod")), (P("pod"), P("pod")),
             )(params_stacked, batch_stacked)
 
     return serve_step

@@ -107,7 +107,10 @@ class SiloRuntime:
 
         Runs in flat-vector space: own params flatten against the cached
         spec, quantized peers flow straight into the fused weighted-sum, and
-        the merged vector unflattens into ``cluster.params`` exactly once."""
+        the merged vector unflattens into ``cluster.params`` exactly once.
+        Peer pulls may cross the WAN fabric: their transfer time accumulates
+        in the store node and is folded into the next training duration;
+        unreachable peers (partition/churn) are skipped, not fatal."""
         entries = self.contract.get_latest_models_with_scores(
             exclude_owner=self.silo_id)
         picked = select_models(entries, agg_policy=self.policy.agg_policy,
@@ -116,7 +119,15 @@ class SiloRuntime:
                                self_score=self.last_self_score, rng=self._rng)
         if not picked:
             return 0
-        peers = [self.get_decoded(c.cid) for c in picked]  # may hit IPFS peers
+        peers = []
+        for c in picked:  # may hit IPFS peers over the fabric
+            try:
+                peers.append(self.get_decoded(c.cid))
+            except (KeyError, IOError):
+                self.env.trace.append(
+                    (self.env.now, f"{self.silo_id}:pull-fail:{c.cid[:8]}"))
+        if not peers:
+            return 0
         weights = [1.0] * (1 + len(peers))
         own_vec, _ = ops.flatten_pytree(self.cluster.params, self.flat_spec())
         new_vec = self.cluster.aggregator.apply_cross_silo_vec(
@@ -140,13 +151,20 @@ class SiloRuntime:
         t0 = time.perf_counter()
         m = self.cluster.train_round()
         compute = (time.perf_counter() - t0) * self.time_scale
-        duration = compute + self.extra_train_delay
+        # WAN time spent pulling peer models for this round's merge enters
+        # the simulated clock here (network charge is not time_scale'd)
+        net_wait = self.store.drain_transfer_time()
+        duration = compute + self.extra_train_delay + net_wait
 
         def finish():
             if not self.alive:
                 return
             cid = self.store.put(self._encode())
             self.last_cid = cid
+            fab = self.store.fabric
+            if fab is not None:
+                # advertise the fresh CID: gossip replication + peer prefetch
+                fab.announce(cid, self.silo_id)
             ev = self.cluster.evaluate()
             self.last_self_score = ev["accuracy"] if self.fed.scorer != "loss" \
                 else -ev["loss"]
@@ -165,11 +183,20 @@ class SiloRuntime:
         self.ledger.submit(self.silo_id, "set_busy", busy=True,
                            logical_time=self.env.now)
         t0 = time.perf_counter()
-        dm = self.get_decoded(cid)
+        try:
+            dm = self.get_decoded(cid)
+        except (KeyError, IOError):
+            # model unreachable (partition/churn): give up this assignment
+            self.env.trace.append(
+                (self.env.now, f"{self.silo_id}:score-fetch-fail:{cid[:8]}"))
+            self.ledger.submit(self.silo_id, "set_busy", busy=False,
+                               logical_time=self.env.now)
+            return
         params = ops.unflatten_pytree(dm.vec(), self.flat_spec())
         score = self.scorer_fn(self.cluster, params)
         compute = (time.perf_counter() - t0) * self.time_scale
-        duration = compute + self.extra_score_delay
+        duration = compute + self.extra_score_delay \
+            + self.store.drain_transfer_time()
 
         def finish():
             if not self.alive:
@@ -223,6 +250,10 @@ class BaseOrchestrator:
         self.silos: List[SiloRuntime] = []
         self._ledger_path = ledger_path
         self.ledger: Optional[Ledger] = None
+        self.fabric = None
+        self.prefetcher = None
+        self.gossip = None
+        self._fault_injector = None
 
     def add_silo(self, cluster: Cluster, **kw) -> SiloRuntime:
         store = self.network.add_node(cluster.silo_id)
@@ -231,7 +262,42 @@ class BaseOrchestrator:
         self.silos.append(silo)
         return silo
 
+    def _build_net(self):
+        """Stand up the simulated WAN fabric described by ``fed.net``."""
+        from repro.net import (FaultInjector, GossipReplicator, NetFabric,
+                               Prefetcher, Topology)
+        net = self.fed.net
+        topo = Topology(net.preset, seed=net.seed)
+        self.fabric = NetFabric(self.env, topo, chunk_bytes=net.chunk_bytes,
+                                seed=net.seed)
+        self.network.attach_fabric(self.fabric)
+        if net.replication_factor > 0:
+            self.gossip = GossipReplicator(self.fabric, self.network,
+                                           factor=net.replication_factor)
+            self.fabric.subscribe(self.gossip.on_announce)
+        if net.prefetch:
+            self.prefetcher = Prefetcher(self.fabric, self.network,
+                                         decode_flat,
+                                         delay_s=net.prefetch_delay_s)
+            self.fabric.subscribe(self.prefetcher.on_announce)
+        if net.scenarios:
+            self._fault_injector = FaultInjector(
+                self.fabric, net.scenarios, on_down=self._silo_net_down)
+            self._fault_injector.schedule_timed()
+
+    def _silo_net_down(self, node_id: str):
+        """Churned-out node == that silo stops participating."""
+        for s in self.silos:
+            if s.silo_id == node_id:
+                s.fail()
+
+    def _net_phase(self, rnd: int, when: str):
+        if self._fault_injector is not None:
+            self._fault_injector.on_phase(rnd, when)
+
     def _wire(self):
+        if self.fed.net is not None and self.fabric is None:
+            self._build_net()
         self.ledger = Ledger([s.silo_id for s in self.silos],
                              path=self._ledger_path)
         self.ledger.attach_contract(self.contract)
@@ -251,12 +317,26 @@ class SyncOrchestrator(BaseOrchestrator):
     live silos have submitted or the deadline lapses; late submissions defer
     to the next round (handled by the contract)."""
 
+    def _run_window(self, deadline: Optional[float], done: Callable[[], bool]):
+        """Run events until ``done()`` or the window's deadline. Closing
+        early doesn't advance the clock (nothing was waited for); a window
+        that times out spends its full duration — stragglers scheduled past
+        it see the elapsed deadline."""
+        while not done():
+            nxt = self.env.peek()
+            if nxt is None or (deadline is not None and nxt > deadline):
+                break
+            self.env.run(max_events=1)
+        if deadline is not None and not done():
+            self.env.run(until=deadline)
+
     def run(self, rounds: int) -> Dict:
         self._wire()
         submitted: Dict[int, set] = {}
         for r in range(1, rounds + 1):
             self.ledger.submit("orchestrator", "start_training",
                                logical_time=self.env.now)
+            self._net_phase(r, "train")
             submitted[r] = set()
             deadline = (self.env.now + self.fed.round_deadline_s
                         if self.fed.round_deadline_s > 0 else None)
@@ -267,16 +347,11 @@ class SyncOrchestrator(BaseOrchestrator):
             for s in self.live():
                 s.pull_and_merge()
                 s.train_and_submit(on_submit)
-            # run until all live silos submitted (barrier) or deadline
-            while True:
-                if deadline is not None:
-                    self.env.run(until=deadline)
-                    break
-                self.env.run(max_events=1)
-                if all(s.silo_id in submitted[r] for s in self.live()) \
-                        or self.env.idle():
-                    break
+            # barrier: all live silos submitted, bounded by the deadline
+            self._run_window(deadline, lambda: all(
+                s.silo_id in submitted[r] for s in self.live()))
             # scoring phase
+            self._net_phase(r, "score")
             assignments = self.ledger.submit("orchestrator", "start_scoring",
                                              logical_time=self.env.now) or {}
             if self.fed.scorer == "multikrum":
@@ -290,10 +365,16 @@ class SyncOrchestrator(BaseOrchestrator):
                             silo.score_async(cid, entry.owner)
                 score_deadline = (self.env.now + self.fed.scorer_deadline_s
                                   if self.fed.scorer_deadline_s > 0 else None)
-                self.env.run(until=score_deadline)
+
+                def scores_complete():
+                    return all(set(e.assigned) <= set(e.scores)
+                               for e in self.contract.get_round_models(r))
+
+                self._run_window(score_deadline, scores_complete)
                 self._reassign_dead_scorers(r)
-                self.env.run(until=(score_deadline + self.fed.scorer_deadline_s)
-                             if score_deadline else None)
+                self._run_window(
+                    (score_deadline + self.fed.scorer_deadline_s)
+                    if score_deadline is not None else None, scores_complete)
             self.ledger.submit("orchestrator", "end_scoring",
                                logical_time=self.env.now)
             for s in self.live():
@@ -310,7 +391,17 @@ class SyncOrchestrator(BaseOrchestrator):
         if len(entries) < 2:
             return
         silo0 = self.silos[0]
-        decoded = [silo0.get_decoded(e.cid) for e in entries]
+        reachable, decoded = [], []
+        for e in entries:
+            try:
+                decoded.append(silo0.get_decoded(e.cid))
+                reachable.append(e)
+            except (KeyError, IOError):
+                self.env.trace.append(
+                    (self.env.now, f"multikrum:fetch-fail:{e.cid[:8]}"))
+        entries = reachable
+        if len(entries) < 2:
+            return
         scores = multikrum_scores_for_decoded(decoded, self.fed.multikrum_m)
         for e, sc in zip(entries, scores):
             for sid in e.assigned:

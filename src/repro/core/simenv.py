@@ -5,38 +5,87 @@ host; the *clock* is simulated so device heterogeneity, stragglers, failures,
 and phase windows are reproducible (and benchmark wall-clock comparisons
 Sync-vs-Async match the paper's mechanism rather than host noise). Real
 measured compute time can be folded into task durations via time_scale.
+
+Events are cancellable handles and may carry a ``key`` (used by the network
+fabric for in-flight transfers: node churn cancels every pending transfer
+keyed to the dead node). ``run(until=deadline)`` advances the clock *to* the
+deadline when the queue drains early — a deadline means the orchestrator
+waited that long, so later events (e.g. a straggler's submission) observe the
+elapsed window.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
-from typing import Callable, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+
+class Event:
+    """A scheduled callback. ``cancel()`` makes the runtime skip it."""
+
+    __slots__ = ("time", "fn", "note", "key", "cancelled")
+
+    def __init__(self, time: float, fn: Callable, note: str = "",
+                 key: Any = None):
+        self.time = time
+        self.fn = fn
+        self.note = note
+        self.key = key
+        self.cancelled = False
+
+    def cancel(self) -> None:
+        self.cancelled = True
 
 
 class SimEnv:
     def __init__(self):
         self.now = 0.0
-        self._q: List[Tuple[float, int, Callable]] = []
+        self._q: List[Tuple[float, int, Event]] = []
         self._counter = itertools.count()
+        self._keyed: Dict[Any, Event] = {}
         self.trace: List[Tuple[float, str]] = []
 
-    def schedule(self, delay: float, fn: Callable, note: str = "") -> None:
-        heapq.heappush(self._q, (self.now + max(0.0, delay),
-                                 next(self._counter), fn, note))
+    def schedule(self, delay: float, fn: Callable, note: str = "",
+                 key: Any = None) -> Event:
+        ev = Event(self.now + max(0.0, delay), fn, note, key)
+        heapq.heappush(self._q, (ev.time, next(self._counter), ev))
+        if key is not None:
+            self._keyed[key] = ev
+        return ev
+
+    def cancel(self, key: Any) -> bool:
+        """Cancel the pending event registered under ``key`` (if any)."""
+        ev = self._keyed.pop(key, None)
+        if ev is None or ev.cancelled:
+            return False
+        ev.cancel()
+        return True
 
     def run(self, until: Optional[float] = None, max_events: int = 10_000_000):
         n = 0
         while self._q and n < max_events:
-            t, _, fn, note = heapq.heappop(self._q)
+            t, _, ev = heapq.heappop(self._q)
             if until is not None and t > until:
-                heapq.heappush(self._q, (t, next(self._counter), fn, note))
+                heapq.heappush(self._q, (t, next(self._counter), ev))
                 break
-            self.now = max(self.now, t)
-            if note:
-                self.trace.append((self.now, note))
-            fn()
             n += 1
+            if ev.cancelled:
+                continue
+            if ev.key is not None and self._keyed.get(ev.key) is ev:
+                del self._keyed[ev.key]
+            self.now = max(self.now, t)
+            if ev.note:
+                self.trace.append((self.now, ev.note))
+            ev.fn()
+        # deadline semantics: waiting until a deadline spends that time even
+        # if every queued event fired earlier
+        if until is not None and (not self._q or self._q[0][0] > until):
+            self.now = max(self.now, until)
         return self.now
+
+    def peek(self) -> Optional[float]:
+        """Time of the next queued event (cancelled ones included), or None."""
+        return self._q[0][0] if self._q else None
 
     def idle(self) -> bool:
         return not self._q

@@ -9,6 +9,14 @@ aggregator machines themselves. Serialization is a deterministic pytree codec
 A ``StoreNetwork`` connects per-silo ``StoreNode``s; ``get`` falls back to
 peers and caches locally (exactly the IPFS behaviour the paper relies on for
 "scorers pull model weights").
+
+With a ``repro.net.NetFabric`` attached, peer fetches stop being free: the
+provider is chosen DHT-style from the fabric's records (nearest reachable
+replica, not always the origin), the transfer is charged simulated time on
+the (src, dst) link, and per-node accounting lands in ``stats``
+(``bytes_in`` / ``bytes_out`` / ``fetch_time`` / ``replica_hits`` /
+``prefetch_hits``). ``drain_transfer_time`` hands the accumulated charge to
+the orchestrator so WAN time enters the simulated clock.
 """
 from __future__ import annotations
 
@@ -74,6 +82,12 @@ def compute_cid(data: bytes) -> str:
     return "bafy" + hashlib.sha256(data).hexdigest()
 
 
+def _chunk(data: bytes) -> List[bytes]:
+    """Split payload bytes into IPFS-style blocks."""
+    return [data[i:i + CHUNK_BYTES]
+            for i in range(0, len(data), CHUNK_BYTES)] or [b""]
+
+
 # --------------------------------------------------------------------------- #
 # Store nodes + network
 # --------------------------------------------------------------------------- #
@@ -84,16 +98,25 @@ class StoreNode:
     def __init__(self, node_id: str, root: Optional[str] = None):
         self.node_id = node_id
         self.root = root
+        self.network: Optional["StoreNetwork"] = None
         self._blocks: Dict[str, List[bytes]] = {}
         self._pins: set = set()
         self._peers: List["StoreNode"] = []
         self._lock = threading.Lock()
         self._decoded: "OrderedDict[str, Any]" = OrderedDict()
+        self._prefetched: set = set()
+        self._pending_net_time = 0.0
         self.stats = {"puts": 0, "gets": 0, "peer_fetches": 0,
                       "bytes_stored": 0, "bytes_fetched": 0,
-                      "decodes": 0, "decode_hits": 0}
+                      "decodes": 0, "decode_hits": 0,
+                      "bytes_in": 0, "bytes_out": 0, "fetch_time": 0.0,
+                      "replica_hits": 0, "prefetch_hits": 0}
         if root:
             os.makedirs(root, exist_ok=True)
+
+    @property
+    def fabric(self):
+        return self.network.fabric if self.network is not None else None
 
     # -- network wiring ---------------------------------------------------- #
     def connect(self, peer: "StoreNode"):
@@ -104,7 +127,7 @@ class StoreNode:
     def put(self, obj, *, pin: bool = True) -> str:
         data = serialize_pytree(obj) if not isinstance(obj, bytes) else obj
         cid = compute_cid(data)
-        chunks = [data[i:i + CHUNK_BYTES] for i in range(0, len(data), CHUNK_BYTES)] or [b""]
+        chunks = _chunk(data)
         with self._lock:
             self._blocks[cid] = chunks
             if pin:
@@ -114,23 +137,71 @@ class StoreNode:
         if self.root:
             with open(os.path.join(self.root, cid), "wb") as f:
                 f.write(data)
+        fab = self.fabric
+        if fab is not None:
+            fab.publish(cid, self.node_id, len(data))
         return cid
 
     def has(self, cid: str) -> bool:
         return cid in self._blocks or (
             self.root and os.path.exists(os.path.join(self.root, cid)))
 
-    def get_bytes(self, cid: str) -> bytes:
+    def read_local(self, cid: str) -> Optional[bytes]:
+        """Local blocks / disk only — never touches the network."""
         with self._lock:
             if cid in self._blocks:
-                self.stats["gets"] += 1
                 return b"".join(self._blocks[cid])
         if self.root:
             p = os.path.join(self.root, cid)
             if os.path.exists(p):
                 with open(p, "rb") as f:
                     return f.read()
-        # DHT-ish: fetch from peers, verify, cache locally
+        return None
+
+    def serve_bytes(self, cid: str) -> Optional[bytes]:
+        """Serve a block set to a remote peer (counts egress accounting)."""
+        data = self.read_local(cid)
+        if data is not None:
+            with self._lock:
+                self.stats["gets"] += 1
+                self.stats["bytes_out"] += len(data)
+        return data
+
+    def ingest(self, cid: str, data: bytes, *, prefetched: bool = False):
+        """Store pushed/fetched bytes locally (gossip replica or prefetch
+        landing). Verifies content addressing; no-op if already present."""
+        if compute_cid(data) != cid:
+            raise IOError(f"integrity failure ingesting {cid} on "
+                          f"{self.node_id}")
+        with self._lock:
+            if cid not in self._blocks:
+                self._blocks[cid] = _chunk(data)
+                self.stats["bytes_in"] += len(data)
+                # a demand fetch that raced us in already paid for these
+                # bytes — only a genuinely landing prefetch earns the credit
+                if prefetched:
+                    self._prefetched.add(cid)
+        fab = self.fabric
+        if fab is not None:
+            fab.add_provider(cid, self.node_id)
+
+    def drain_transfer_time(self) -> float:
+        """Simulated seconds of WAN transfer accumulated since the last
+        drain; the orchestrator folds this into its scheduled durations."""
+        with self._lock:
+            t, self._pending_net_time = self._pending_net_time, 0.0
+        return t
+
+    def get_bytes(self, cid: str) -> bytes:
+        data = self.read_local(cid)
+        if data is not None:
+            with self._lock:
+                self.stats["gets"] += 1
+            return data
+        fab = self.fabric
+        if fab is not None:
+            return self._fetch_via_fabric(cid, fab)
+        # no fabric: legacy instantaneous DHT-ish peer fetch
         for peer in self._peers:
             if peer.has(cid):
                 data = peer.get_bytes(cid)
@@ -138,12 +209,58 @@ class StoreNode:
                     raise IOError(f"integrity failure fetching {cid} "
                                   f"from {peer.node_id}")
                 with self._lock:
-                    self._blocks[cid] = [data[i:i + CHUNK_BYTES]
-                                         for i in range(0, len(data), CHUNK_BYTES)] or [b""]
+                    self._blocks[cid] = _chunk(data)
                     self.stats["peer_fetches"] += 1
                     self.stats["bytes_fetched"] += len(data)
                 return data
         raise KeyError(f"CID {cid} not found on {self.node_id} or peers")
+
+    def _fetch_via_fabric(self, cid: str, fab) -> bytes:
+        """Pull over the WAN fabric: nearest reachable replica, integrity
+        check, link-time charge, replica/reroute accounting."""
+        from repro.net.fabric import UnreachableError
+        tried: tuple = ()
+        while True:
+            src_id = fab.best_provider(self.node_id, cid, exclude=tried)
+            if src_id is None:
+                if fab.has_unreachable_provider(self.node_id, cid,
+                                                exclude=tried):
+                    raise UnreachableError(
+                        f"CID {cid} unreachable from {self.node_id}: every "
+                        f"provider is partitioned away or down")
+                raise KeyError(f"CID {cid} not found on {self.node_id} "
+                               f"or any reachable provider")
+            peer = self.network.nodes.get(src_id) if self.network else None
+            data = peer.serve_bytes(cid) if peer is not None else None
+            if data is None:
+                # stale provider record (gc'd or dropped node)
+                fab.drop_provider(cid, src_id)
+                tried = tried + (src_id,)
+                continue
+            if compute_cid(data) != cid:
+                raise IOError(f"integrity failure fetching {cid} "
+                              f"from {src_id}")
+            origin = fab.origin(cid)
+            if src_id == origin:
+                kind = "fetch"
+            elif origin is not None and \
+                    not fab.reachable(self.node_id, origin):
+                kind = "reroute"     # failover: origin gone, replica serves
+            else:
+                kind = "replica"     # replica was simply nearer
+            charged = fab.transfer(src_id, self.node_id, cid, len(data),
+                                   kind=kind)
+            with self._lock:
+                self._blocks[cid] = _chunk(data)
+                self.stats["peer_fetches"] += 1
+                self.stats["bytes_fetched"] += len(data)
+                self.stats["bytes_in"] += len(data)
+                self.stats["fetch_time"] += charged
+                self._pending_net_time += charged
+                if kind != "fetch":
+                    self.stats["replica_hits"] += 1
+            fab.add_provider(cid, self.node_id)
+            return data
 
     def get(self, cid: str, like=None):
         return deserialize_pytree(self.get_bytes(cid), like)
@@ -159,6 +276,10 @@ class StoreNode:
         with self._lock:
             if cid in self._decoded:
                 self.stats["decode_hits"] += 1
+                if cid in self._prefetched:
+                    # one hit per prefetched CID: "the prefetch was useful"
+                    self.stats["prefetch_hits"] += 1
+                    self._prefetched.discard(cid)
                 self._decoded.move_to_end(cid)
                 return self._decoded[cid]
         obj = decoder(self.get(cid))
@@ -167,13 +288,42 @@ class StoreNode:
             # keep its object so all callers share one decoded model
             if cid in self._decoded:
                 self.stats["decode_hits"] += 1
+                if cid in self._prefetched:
+                    # one hit per prefetched CID: "the prefetch was useful"
+                    self.stats["prefetch_hits"] += 1
+                    self._prefetched.discard(cid)
                 self._decoded.move_to_end(cid)
                 return self._decoded[cid]
             self.stats["decodes"] += 1
             self._decoded[cid] = obj
             while len(self._decoded) > DECODED_CACHE_MAX:
-                self._decoded.popitem(last=False)
+                evicted, _ = self._decoded.popitem(last=False)
+                self._prefetched.discard(evicted)
         return obj
+
+    def has_decoded(self, cid: str) -> bool:
+        with self._lock:
+            return cid in self._decoded
+
+    def warm_decoded(self, cid: str, decoder: Callable):
+        """Prefetch landing: decode a locally-present CID into the cache and
+        mark it, so the eventual consumer's hit counts as a prefetch hit. If
+        something already decoded it, leave the attribution alone."""
+        with self._lock:
+            if cid in self._decoded:
+                return
+        data = self.read_local(cid)
+        if data is None:
+            return
+        obj = decoder(deserialize_pytree(data))
+        with self._lock:
+            if cid not in self._decoded:
+                self.stats["decodes"] += 1
+                self._decoded[cid] = obj
+                self._prefetched.add(cid)
+                while len(self._decoded) > DECODED_CACHE_MAX:
+                    evicted, _ = self._decoded.popitem(last=False)
+                    self._prefetched.discard(evicted)
 
     def pin(self, cid: str):
         self._pins.add(cid)
@@ -187,17 +337,32 @@ class StoreNode:
 
 
 class StoreNetwork:
-    """Fully-connected private swarm of silo store nodes."""
+    """Fully-connected private swarm of silo store nodes. Attach a
+    ``repro.net.NetFabric`` to make transfers cost simulated time."""
 
-    def __init__(self):
+    def __init__(self, fabric=None):
         self.nodes: Dict[str, StoreNode] = {}
+        self.fabric = fabric
+
+    def attach_fabric(self, fabric) -> None:
+        """Install the WAN fabric; existing nodes and their blocks are
+        registered/published so provider records match reality."""
+        self.fabric = fabric
+        for node in self.nodes.values():
+            fabric.register_node(node.node_id)
+            for cid, chunks in node._blocks.items():
+                fabric.publish(cid, node.node_id,
+                               sum(len(c) for c in chunks))
 
     def add_node(self, node_id: str, root: Optional[str] = None) -> StoreNode:
         node = StoreNode(node_id, root)
+        node.network = self
         for other in self.nodes.values():
             node.connect(other)
             other.connect(node)
         self.nodes[node_id] = node
+        if self.fabric is not None:
+            self.fabric.register_node(node_id)
         return node
 
     def drop_node(self, node_id: str):
@@ -206,4 +371,6 @@ class StoreNetwork:
         for other in self.nodes.values():
             if node in other._peers:
                 other._peers.remove(node)
+        if self.fabric is not None:
+            self.fabric.node_down(node_id)
         return node

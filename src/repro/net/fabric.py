@@ -1,0 +1,292 @@
+"""The simulated WAN fabric under the store network.
+
+Converts the store from "peer fetch is free" into a scheduled, observable
+resource on the orchestrator's ``SimEnv``:
+
+  * every CID transfer serializes its 1 MiB blocks over the (src, dst) link
+    and is *charged* simulated time: queue wait + latency + seeded jitter +
+    blocks / bandwidth. Links carry two QoS lanes: demand traffic (fetch /
+    replica / reroute) serializes only behind other demand transfers, while
+    background traffic (prefetch / gossip replication) is scavenger-class —
+    it queues behind *everything* and never delays a demand fetch;
+  * DHT-style provider records track which nodes hold which CID; fetches are
+    served from the cheapest reachable replica, not always the origin;
+  * faults are first-class: network partitions, node churn (with in-flight
+    transfer cancellation via the SimEnv's keyed events), and degraded
+    "slow" links;
+  * ``announce`` fans a newly submitted CID out to subscribers (the gossip
+    replicator and the async prefetcher).
+
+The fabric never moves bytes itself — callers (StoreNode / gossip /
+prefetcher) read blocks from the source node and ask the fabric how much
+simulated time the move costs. That keeps the data plane synchronous (real
+numpy copies) while the clock stays simulated, matching how SiloRuntime
+treats compute.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+from repro.net.topology import Topology
+
+_CID_W = 12  # cid prefix width in trace notes
+
+
+class UnreachableError(IOError):
+    """Every provider of a CID is partitioned away, down, or churned out."""
+
+
+@dataclass(frozen=True)
+class TransferRecord:
+    kind: str       # 'fetch' | 'replica' | 'reroute' | 'replicate' | 'prefetch'
+    src: str
+    dst: str
+    cid: str
+    nbytes: int
+    t_start: float
+    t_end: float
+
+
+def _link_key(a: str, b: str) -> Tuple[str, str]:
+    return (a, b) if a <= b else (b, a)
+
+
+# scavenger-class kinds: yield the link to demand traffic
+_BACKGROUND = ("prefetch", "replicate")
+
+
+class NetFabric:
+    def __init__(self, env, topology: Topology, *,
+                 chunk_bytes: int = 1 << 20, seed: int = 0):
+        import random
+        self.env = env
+        self.topology = topology
+        self.chunk_bytes = int(chunk_bytes)
+        self._rng = random.Random(0xFAB ^ seed)
+        self._nodes: List[str] = []
+        self._down: Set[str] = set()
+        self._groups: Optional[Dict[str, int]] = None   # partition map
+        self._degraded: Dict[Tuple[str, str], float] = {}
+        self._busy: Dict[Tuple[str, str], float] = {}   # link -> busy-until
+        self._providers: Dict[str, List[str]] = {}      # cid -> node ids
+        self._origin: Dict[str, str] = {}
+        self._sizes: Dict[str, int] = {}
+        self._subscribers: List[Callable[[str, str, int], None]] = []
+        self._inflight: Dict[Any, Tuple[str, str]] = {} # key -> (src, dst)
+        self.trace: List[TransferRecord] = []
+        self.stats = {"transfers": 0, "bytes": 0, "queue_wait_s": 0.0,
+                      "busy_s": 0.0, "reroutes": 0, "replica_serves": 0,
+                      "cancelled": 0}
+
+    # -- membership --------------------------------------------------------- #
+    def register_node(self, node_id: str) -> None:
+        if node_id not in self._nodes:
+            self._nodes.append(node_id)
+
+    @property
+    def nodes(self) -> List[str]:
+        return list(self._nodes)
+
+    def is_up(self, node_id: str) -> bool:
+        return node_id not in self._down
+
+    # -- provider records (DHT) --------------------------------------------- #
+    def publish(self, cid: str, node_id: str, nbytes: int) -> None:
+        """Record a provider for ``cid`` (put / cached fetch / replica)."""
+        self.register_node(node_id)
+        provs = self._providers.setdefault(cid, [])
+        if node_id not in provs:
+            provs.append(node_id)
+        self._sizes[cid] = int(nbytes)
+        self._origin.setdefault(cid, node_id)
+
+    def add_provider(self, cid: str, node_id: str) -> None:
+        provs = self._providers.setdefault(cid, [])
+        if node_id not in provs:
+            provs.append(node_id)
+
+    def drop_provider(self, cid: str, node_id: str) -> None:
+        provs = self._providers.get(cid)
+        if provs and node_id in provs:
+            provs.remove(node_id)
+
+    def providers(self, cid: str) -> List[str]:
+        return list(self._providers.get(cid, ()))
+
+    def origin(self, cid: str) -> Optional[str]:
+        return self._origin.get(cid)
+
+    def size_of(self, cid: str) -> int:
+        return self._sizes.get(cid, self.chunk_bytes)
+
+    def known(self, cid: str) -> bool:
+        return bool(self._providers.get(cid))
+
+    # -- announcements ------------------------------------------------------ #
+    def subscribe(self, fn: Callable[[str, str, int], None]) -> None:
+        """fn(cid, owner, nbytes) fires on every announced CID."""
+        self._subscribers.append(fn)
+
+    def announce(self, cid: str, owner: str) -> None:
+        """Owner advertises a fresh CID (a submitted model): gossip + prefetch
+        subscribers react. Plain puts only ``publish`` provider records."""
+        nbytes = self.size_of(cid)
+        for fn in list(self._subscribers):
+            fn(cid, owner, nbytes)
+
+    # -- reachability / faults ---------------------------------------------- #
+    def reachable(self, a: str, b: str) -> bool:
+        if a == b:
+            return True
+        if a in self._down or b in self._down:
+            return False
+        if self._groups is not None and \
+                self._groups.get(a, 0) != self._groups.get(b, 0):
+            return False
+        return True
+
+    def partition(self, *groups) -> None:
+        """Split the swarm: nodes in different groups can't exchange blocks.
+        Unlisted nodes join group 0."""
+        gmap: Dict[str, int] = {}
+        for gi, group in enumerate(groups):
+            for nid in group:
+                gmap[nid] = gi
+        self._groups = gmap
+        self.env.trace.append((self.env.now, "net:partition:" + "|".join(
+            ",".join(sorted(g)) for g in groups)))
+
+    def isolate(self, node_id: str) -> None:
+        """Partition one node away from everyone else. Cumulative: nodes
+        isolated earlier stay isolated until ``heal``."""
+        gmap = dict(self._groups) if self._groups is not None \
+            else {n: 0 for n in self._nodes}
+        gmap[node_id] = max(gmap.values(), default=0) + 1
+        self._groups = gmap
+        self.env.trace.append((self.env.now, f"net:isolate:{node_id}"))
+
+    def heal(self) -> None:
+        self._groups = None
+        self.env.trace.append((self.env.now, "net:heal"))
+
+    def node_down(self, node_id: str) -> None:
+        """Churn a node out; every in-flight transfer touching it is
+        cancelled through the SimEnv's keyed events."""
+        self._down.add(node_id)
+        for key, (src, dst) in list(self._inflight.items()):
+            if node_id in (src, dst):
+                if self.env.cancel(key):
+                    self.stats["cancelled"] += 1
+                del self._inflight[key]
+        self.env.trace.append((self.env.now, f"net:down:{node_id}"))
+
+    def node_up(self, node_id: str) -> None:
+        self._down.discard(node_id)
+        self.env.trace.append((self.env.now, f"net:up:{node_id}"))
+
+    def degrade_link(self, a: str, b: str, factor: float) -> None:
+        """Scale a link's bandwidth by 1/factor (slow-link straggler)."""
+        if factor <= 0:
+            raise ValueError("degrade factor must be > 0")
+        self._degraded[_link_key(a, b)] = float(factor)
+        self.env.trace.append((self.env.now,
+                               f"net:slow-link:{a}~{b}:x{factor:g}"))
+
+    # -- transfer scheduling ------------------------------------------------ #
+    def _duration_s(self, src: str, dst: str, nbytes: int) -> float:
+        prof = self.topology.link(src, dst)
+        factor = self._degraded.get(_link_key(src, dst), 1.0)
+        n_blocks = max(1, -(-int(nbytes) // self.chunk_bytes))
+        jitter = self._rng.uniform(0.0, prof.jitter_s) if prof.jitter_s else 0.0
+        return prof.latency_s + jitter + \
+            n_blocks * prof.block_s(self.chunk_bytes) * factor
+
+    def transfer(self, src: str, dst: str, cid: str, nbytes: int, *,
+                 kind: str = "fetch") -> float:
+        """Reserve the (src, dst) link for one chunked CID transfer starting
+        now; returns the simulated seconds the *destination* is charged
+        (queue wait + serialization). Raises UnreachableError on faults."""
+        if not self.reachable(src, dst):
+            raise UnreachableError(f"{src}->{dst} unreachable "
+                                   f"(partition or churn)")
+        duration = self._duration_s(src, dst, nbytes)
+        lk = _link_key(src, dst)
+        fg, bg = (lk, "fg"), (lk, "bg")
+        if kind in _BACKGROUND:
+            # background waits for both lanes; demand never waits for it
+            start = max(self.env.now, self._busy.get(fg, 0.0),
+                        self._busy.get(bg, 0.0))
+            self._busy[bg] = start + duration
+        else:
+            start = max(self.env.now, self._busy.get(fg, 0.0))
+            self._busy[fg] = start + duration
+        end = start + duration
+        self.trace.append(TransferRecord(kind, src, dst, cid, int(nbytes),
+                                         start, end))
+        self.env.trace.append(
+            (self.env.now, f"net:{kind}:{src}->{dst}:{cid[:_CID_W]}"))
+        self.stats["transfers"] += 1
+        self.stats["bytes"] += int(nbytes)
+        self.stats["queue_wait_s"] += start - self.env.now
+        self.stats["busy_s"] += duration
+        if kind == "reroute":
+            self.stats["reroutes"] += 1
+        if kind in ("replica", "reroute"):
+            self.stats["replica_serves"] += 1
+        return end - self.env.now
+
+    def transfer_async(self, src: str, dst: str, cid: str, nbytes: int,
+                       on_land: Callable[[], None], *, kind: str,
+                       key: Any = None) -> float:
+        """Like ``transfer`` but the payload only *lands* (``on_land``) after
+        the charged time elapses — an in-flight, cancellable transfer."""
+        charged = self.transfer(src, dst, cid, nbytes, kind=kind)
+        key = key if key is not None else (kind, dst, cid)
+        self._inflight[key] = (src, dst)
+
+        def land():
+            self._inflight.pop(key, None)
+            on_land()
+
+        self.env.schedule(charged, land,
+                          f"net:land:{kind}:{dst}:{cid[:_CID_W]}", key=key)
+        return charged
+
+    # -- replica selection -------------------------------------------------- #
+    def best_provider(self, dst: str, cid: str,
+                      exclude: Tuple[str, ...] = ()) -> Optional[str]:
+        """Cheapest reachable provider: queue wait + latency + payload time,
+        node id as the deterministic tiebreak."""
+        nbytes = self.size_of(cid)
+        best, best_cost = None, None
+        for p in self._providers.get(cid, ()):
+            if p == dst or p in exclude or not self.reachable(p, dst):
+                continue
+            wait = max(0.0, self._busy.get((_link_key(p, dst), "fg"), 0.0)
+                       - self.env.now)
+            cost = (wait + self.topology.base_cost_s(p, dst, nbytes,
+                                                     self.chunk_bytes), p)
+            if best_cost is None or cost < best_cost:
+                best, best_cost = p, cost
+        return best
+
+    def has_unreachable_provider(self, dst: str, cid: str,
+                                 exclude: Tuple[str, ...] = ()) -> bool:
+        return any(p != dst and (p in exclude or not self.reachable(p, dst))
+                   for p in self._providers.get(cid, ()))
+
+    def nearest(self, node_id: str, k: int,
+                exclude: Tuple[str, ...] = ()) -> List[str]:
+        """The k cheapest reachable peers of ``node_id`` (one-block cost)."""
+        cands = []
+        for other in self._nodes:
+            if other == node_id or other in exclude \
+                    or not self.reachable(node_id, other):
+                continue
+            cost = self.topology.base_cost_s(node_id, other,
+                                             self.chunk_bytes,
+                                             self.chunk_bytes)
+            cands.append((cost, other))
+        cands.sort()
+        return [nid for _, nid in cands[:max(0, k)]]

@@ -1,0 +1,73 @@
+"""Per-round / timed fault injection for the WAN fabric.
+
+Scenarios live in ``NetConfig.scenarios`` (plain frozen dataclasses, see
+``repro.config.FaultScenario``) so a FedConfig fully describes a faulty run:
+
+  * round-phased (Sync engine): fire when round ``r`` enters its training or
+    scoring phase — deterministic regardless of host compute noise;
+  * timed (both engines): fire at an absolute simulated time.
+
+Actions: ``down`` / ``up`` (node churn — cancels that node's in-flight
+transfers), ``isolate`` / ``heal`` (link partitions), ``slow_link``
+(bandwidth degraded by ``factor`` — a slow-link straggler).
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable, Optional
+
+from repro.config import FaultScenario
+from repro.net.fabric import NetFabric
+
+ACTIONS = ("down", "up", "isolate", "heal", "slow_link")
+
+
+def apply_scenario(fabric: NetFabric, sc: FaultScenario, *,
+                   on_down: Optional[Callable[[str], None]] = None,
+                   on_up: Optional[Callable[[str], None]] = None) -> None:
+    if sc.action == "down":
+        fabric.node_down(sc.node)
+        if on_down is not None:
+            on_down(sc.node)
+    elif sc.action == "up":
+        fabric.node_up(sc.node)
+        if on_up is not None:
+            on_up(sc.node)
+    elif sc.action == "isolate":
+        fabric.isolate(sc.node)
+    elif sc.action == "heal":
+        fabric.heal()
+    elif sc.action == "slow_link":
+        fabric.degrade_link(sc.node, sc.node_b, sc.factor)
+    else:
+        raise ValueError(f"unknown fault action {sc.action!r} "
+                         f"(choose from {ACTIONS})")
+
+
+class FaultInjector:
+    def __init__(self, fabric: NetFabric,
+                 scenarios: Iterable[FaultScenario], *,
+                 on_down: Optional[Callable[[str], None]] = None,
+                 on_up: Optional[Callable[[str], None]] = None):
+        self.fabric = fabric
+        self.scenarios = tuple(scenarios)
+        self.on_down = on_down
+        self.on_up = on_up
+
+    def schedule_timed(self) -> None:
+        """Arm every ``at_time`` scenario on the fabric's SimEnv."""
+        env = self.fabric.env
+        for sc in self.scenarios:
+            if sc.at_time >= 0.0:
+                env.schedule(max(0.0, sc.at_time - env.now),
+                             lambda sc=sc: self._apply(sc),
+                             f"net:fault:{sc.action}:{sc.node}")
+
+    def on_phase(self, rnd: int, when: str) -> None:
+        """Fire round-phased scenarios (Sync engine hook)."""
+        for sc in self.scenarios:
+            if sc.at_time < 0.0 and sc.round == rnd and sc.when == when:
+                self._apply(sc)
+
+    def _apply(self, sc: FaultScenario) -> None:
+        apply_scenario(self.fabric, sc, on_down=self.on_down,
+                       on_up=self.on_up)

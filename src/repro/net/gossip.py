@@ -1,0 +1,51 @@
+"""Gossip replication of announced CIDs.
+
+IPFS keeps popularity-driven replicas implicitly (every fetch caches); that
+only helps *after* someone paid the WAN fetch. The replicator pushes each
+announced model CID to the owner's ``factor`` nearest peers proactively, so
+hot CIDs have a close replica before scorers/aggregators come asking — and so
+a churned-out origin doesn't take its round's model down with it (the
+failover path in ``StoreNode.get_bytes`` reroutes to these replicas).
+
+Pushes ride ``NetFabric.transfer_async``: they occupy links, take simulated
+time to land, and are cancelled by churn like any in-flight transfer.
+"""
+from __future__ import annotations
+
+from repro.net.fabric import NetFabric, UnreachableError
+
+
+class GossipReplicator:
+    def __init__(self, fabric: NetFabric, network, factor: int = 1):
+        self.fabric = fabric
+        self.network = network          # StoreNetwork (duck-typed: .nodes)
+        self.factor = int(factor)
+        self.stats = {"pushes": 0, "landed": 0, "skipped": 0, "failed": 0}
+
+    def on_announce(self, cid: str, owner: str, nbytes: int) -> None:
+        if self.factor <= 0:
+            return
+        src_node = self.network.nodes.get(owner)
+        if src_node is None:
+            return
+        for peer_id in self.fabric.nearest(owner, self.factor):
+            peer = self.network.nodes.get(peer_id)
+            if peer is None or peer.has(cid):
+                self.stats["skipped"] += 1
+                continue
+            data = src_node.serve_bytes(cid)
+            if data is None:
+                self.stats["failed"] += 1
+                return
+
+            def land(peer=peer, data=data):
+                peer.ingest(cid, data)
+                self.stats["landed"] += 1
+
+            try:
+                self.fabric.transfer_async(owner, peer_id, cid, len(data),
+                                           land, kind="replicate",
+                                           key=("replicate", peer_id, cid))
+                self.stats["pushes"] += 1
+            except UnreachableError:
+                self.stats["failed"] += 1

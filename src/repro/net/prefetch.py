@@ -1,0 +1,80 @@
+"""Async CID prefetch: warm the decoded cache during the training window.
+
+The ROADMAP lever this module closes: when a silo announces a model CID, every
+other silo is busy with its local training window — its store link is idle.
+The prefetcher uses that window to pull the announced payload over the fabric
+and decode it into the destination node's decoded-model cache, so the scoring
+window / next round's pull-and-merge starts warm (a ``decode_hit`` +
+``prefetch_hit`` instead of a charged WAN fetch).
+
+Semantics:
+  * a prefetched payload only becomes visible when its in-flight transfer
+    *lands* (simulated transfer time elapses) — no premature warmth;
+  * transfers are keyed SimEnv events: node churn cancels them mid-flight;
+  * the link time a prefetch consumes is real fabric time (it queues behind
+    and ahead of other transfers on the same link) but is *not* charged to
+    the silo's compute windows — that is exactly the overlap the paper's
+    async mode exists to exploit.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.net.fabric import NetFabric, UnreachableError
+
+
+class Prefetcher:
+    def __init__(self, fabric: NetFabric, network, decoder: Callable, *,
+                 delay_s: float = 0.0):
+        self.fabric = fabric
+        self.network = network          # StoreNetwork (duck-typed: .nodes)
+        self.decoder = decoder
+        self.delay_s = float(delay_s)
+        self.stats = {"issued": 0, "completed": 0, "skipped": 0, "failed": 0}
+
+    # fabric announce subscriber ------------------------------------------- #
+    def on_announce(self, cid: str, owner: str, nbytes: int) -> None:
+        for nid in list(self.network.nodes):
+            if nid == owner:
+                continue
+            self.stats["issued"] += 1
+            self.fabric.env.schedule(
+                self.delay_s, lambda nid=nid: self._fire(nid, cid),
+                f"net:prefetch-start:{nid}:{cid[:12]}",
+                key=("prefetch-start", nid, cid))
+
+    def _fire(self, nid: str, cid: str) -> None:
+        node = self.network.nodes.get(nid)
+        if node is None or not self.fabric.is_up(nid):
+            self.stats["failed"] += 1
+            return
+        if node.has(cid) or node.has_decoded(cid):
+            # a scorer already pulled it the moment it was announced — the
+            # cache is warm without us
+            self.stats["skipped"] += 1
+            return
+        src = self.fabric.best_provider(nid, cid)
+        src_node = self.network.nodes.get(src) if src else None
+        data = src_node.serve_bytes(cid) if src_node else None
+        if data is None:
+            self.stats["failed"] += 1
+            return
+
+        def land(node=node, data=data):
+            node.ingest(cid, data, prefetched=True)
+            node.warm_decoded(cid, self.decoder)
+            self.stats["completed"] += 1
+
+        try:
+            self.fabric.transfer_async(src, nid, cid, len(data), land,
+                                       kind="prefetch",
+                                       key=("prefetch", nid, cid))
+        except UnreachableError:
+            self.stats["failed"] += 1
+
+    def hit_stats(self) -> dict:
+        hits = sum(n.stats.get("prefetch_hits", 0)
+                   for n in self.network.nodes.values())
+        done = max(1, self.stats["completed"])
+        return {**self.stats, "hits": hits,
+                "hit_rate": hits / done}

@@ -17,6 +17,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 _MESH: Optional[Mesh] = None
 _MANUAL: tuple = ()  # axes currently inside a shard_map manual region
 
+# jax < 0.5 can't express "Manual subgroup" constraint meshes (no AxisType);
+# emitting constraints inside a partial-manual shard_map region there trips
+# an XLA CHECK (IsManualSubgroup). Constraints are layout hints, so they are
+# simply skipped in manual regions on those versions.
+_HAS_AXISTYPE = hasattr(jax.sharding, "AxisType")
+
 # Logical batch axis: models constrain batch dims with the BATCH sentinel;
 # 'tp' sharding resolves it to ('pod','data'), 'fsdp' to
 # ('pod','data','model') (pure ZeRO-3: both axes act data-parallel).
@@ -136,6 +142,8 @@ def constrain(x, *spec):
     """with_sharding_constraint against the installed mesh (no-op if none)."""
     if _MESH is None or len(_MESH.axis_names) == 0:
         return x
+    if _MANUAL and not _HAS_AXISTYPE:
+        return x
     resolved = size_filter(resolve_spec(*spec), x.shape)
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(_constraint_mesh(), resolved))
@@ -181,9 +189,9 @@ def tree_path_str(path) -> str:
 def param_shardings(params, rules):
     """Pytree of NamedSharding for a param pytree, by path-regex rules."""
     def one(path, leaf):
-        spec = spec_for_param(tree_path_str(path), leaf.shape, rules)
-        if _MESH is None:
+        if _MESH is None or (_MANUAL and not _HAS_AXISTYPE):
             return None
+        spec = spec_for_param(tree_path_str(path), leaf.shape, rules)
         return NamedSharding(_MESH, spec)
     return jax.tree_util.tree_map_with_path(one, params)
 

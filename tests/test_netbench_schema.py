@@ -1,0 +1,58 @@
+"""benchmarks/netbench.py --quick inside the tier-1 budget: the BENCH_net
+artifact keeps its schema and the acceptance invariants stay machine-checked
+(prefetch speeds up async WAN, hit rate > 0, partition failover reroutes)."""
+import json
+
+import pytest
+
+netbench = pytest.importorskip("benchmarks.netbench",
+                               reason="benchmarks/ needs repo-root cwd")
+
+
+@pytest.fixture(scope="module")
+def bench(tmp_path_factory):
+    out_path = tmp_path_factory.mktemp("bench") / "BENCH_net.json"
+    result = netbench.main(quick=True, out_path=str(out_path))
+    return result, json.loads(out_path.read_text())
+
+
+def test_bench_net_schema(bench):
+    result, written = bench
+    assert written == json.loads(json.dumps(result))  # artifact == return
+    assert written["quick"] is True
+    assert set(written) == {"quick", "config", "scenarios",
+                            "async_prefetch_speedup", "prefetch_hit_rate",
+                            "failover"}
+    expected_scenarios = {"sync_lan", "sync_wan-heterogeneous", "async_lan",
+                          "async_wan-heterogeneous",
+                          "async_wan-heterogeneous_noprefetch"}
+    assert set(written["scenarios"]) == expected_scenarios
+    for name, row in written["scenarios"].items():
+        assert row["wall_clock_s"] > 0
+        assert row["drained_wall_clock_s"] >= row["wall_clock_s"]
+        assert row["wall_clock_per_round_s"] > 0
+        assert {"bytes_in", "bytes_out", "fetch_time", "replica_hits",
+                "prefetch_hits"} <= set(row["store"])
+        assert row["net"]["transfers"] > 0
+        if name.endswith("noprefetch"):
+            assert row["prefetch"] is None
+        else:
+            assert {"issued", "completed", "hits",
+                    "hit_rate"} <= set(row["prefetch"])
+    assert {"reroutes", "origin_model_scored",
+            "completed"} <= set(written["failover"])
+
+
+def test_bench_net_acceptance(bench):
+    _, written = bench
+    # WAN transfers cost simulated time that lan barely pays
+    scen = written["scenarios"]
+    assert scen["sync_wan-heterogeneous"]["store"]["fetch_time"] > \
+        scen["sync_lan"]["store"]["fetch_time"]
+    # async + prefetch beats async without prefetch under wan-heterogeneous
+    assert written["async_prefetch_speedup"] > 1.0
+    assert written["prefetch_hit_rate"] > 0
+    # the partitioned-origin round completed via replica failover
+    assert written["failover"]["completed"]
+    assert written["failover"]["reroutes"] >= 1
+    assert written["failover"]["origin_model_scored"]

@@ -33,6 +33,41 @@ def test_run_until_pauses_and_resumes():
     assert seen == [1, 5]
 
 
+def test_run_until_advances_clock_to_deadline():
+    """A deadline spends the window even if every event fired earlier —
+    stragglers scheduled past the window stay reachable in later phases."""
+    env = SimEnv()
+    env.schedule(0.5, lambda: None)
+    env.run(until=2.0)
+    assert env.now == 2.0
+    env.schedule(0.1, lambda: None)
+    env.run()
+    assert env.now == 2.1
+
+
+def test_cancelled_event_is_skipped():
+    env = SimEnv()
+    seen = []
+    ev = env.schedule(1.0, lambda: seen.append("cancelled"))
+    env.schedule(2.0, lambda: seen.append("kept"))
+    ev.cancel()
+    env.run()
+    assert seen == ["kept"]
+
+
+def test_keyed_cancel():
+    env = SimEnv()
+    seen = []
+    env.schedule(1.0, lambda: seen.append("a"), key=("xfer", "a"))
+    env.schedule(1.0, lambda: seen.append("b"), key=("xfer", "b"))
+    assert env.cancel(("xfer", "a"))
+    assert not env.cancel(("xfer", "missing"))
+    env.run()
+    assert seen == ["b"]
+    # key registry is cleaned up after firing
+    assert not env.cancel(("xfer", "b"))
+
+
 def test_nested_scheduling():
     env = SimEnv()
     seen = []
