@@ -1,0 +1,15 @@
+# The tier-1 verify invocation lives here and nowhere else: CI, the docs and
+# humans all run `make verify`. PYTEST_ARGS appends (e.g. -m "not slow").
+PYTHON ?= python
+PYTEST_ARGS ?=
+
+.PHONY: verify netbench kernelbench
+
+verify:
+	PYTHONPATH=src $(PYTHON) -m pytest -x -q $(PYTEST_ARGS)
+
+netbench:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.netbench --quick
+
+kernelbench:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.kernelbench

@@ -36,13 +36,14 @@ TIME_SCALE = 0.0        # sim clock independent of host compute => exact repro
 
 
 def _fed(mode: str, net: Optional[NetConfig], *, silos: int, rounds: int,
-         round_deadline_s: float = 0.0, scorer_deadline_s: float = 0.0
-         ) -> FedConfig:
+         round_deadline_s: float = 0.0, scorer_deadline_s: float = 0.0,
+         compression: str = "none") -> FedConfig:
     return FedConfig(n_silos=silos, clients_per_silo=1, rounds=rounds,
                      local_epochs=1, mode=mode, scorer="accuracy",
                      agg_policy="all", score_policy="median",
                      round_deadline_s=round_deadline_s,
-                     scorer_deadline_s=scorer_deadline_s, net=net)
+                     scorer_deadline_s=scorer_deadline_s,
+                     compression=compression, net=net)
 
 
 def _run(fed: FedConfig, *, n_train: int, n_test: int, seed: int = 0,
@@ -123,6 +124,38 @@ def run_grid(quick: bool) -> Tuple[Dict, float]:
     return out, speedup
 
 
+def run_delta(quick: bool) -> Dict:
+    """The wire-format lever: sync rounds on wan-heterogeneous with
+    whole-model ``int8`` envelopes vs tile-sparse ``int8-delta`` (deltas vs
+    each silo's previous announced model, base chain resolved by CID).
+    Reports per-round WAN bytes and the steady-state byte ratio (acceptance:
+    <= 0.5x from round 2 onward — round 1 has no base and ships whole)."""
+    silos, rounds = 5, 3
+    specs = lambda: [SiloSpec(extra_train_delay=TRAIN_WINDOW_S
+                              + STAGGER_S * (i - 2))
+                     for i in range(silos)]
+    per_round: Dict[str, list] = {}
+    for comp in ("int8", "int8-delta"):
+        net = NetConfig(preset="wan-heterogeneous", replication_factor=1,
+                        prefetch=True)
+        fed = _fed("sync", net, silos=silos, rounds=rounds, compression=comp)
+        orch = _run(fed, n_train=400 if quick else 1500,
+                    n_test=160 if quick else 400, silo_specs=specs())
+        prev, rows = 0, []
+        for mark in orch.round_log:
+            rows.append(mark["wan_bytes"] - prev)
+            prev = mark["wan_bytes"]
+        per_round[comp] = rows
+    ratios = [d / i for d, i in zip(per_round["int8-delta"][1:],
+                                    per_round["int8"][1:]) if i > 0]
+    ratio = max(ratios) if ratios else 1.0
+    emit("net_delta_bytes_ratio", f"{ratio:.3f}",
+         "worst per-round int8-delta/int8 WAN bytes from round 2 on")
+    return {"per_round_wan_bytes": per_round,
+            "delta_bytes_ratio": ratio,
+            "per_round_ratios": [round(r, 4) for r in ratios]}
+
+
 def run_failover(quick: bool) -> Dict:
     """Origin silo churns out between submit and scoring; gossip replica
     serves the rerouted fetches and the round still finalizes."""
@@ -154,6 +187,7 @@ def run_failover(quick: bool) -> Dict:
 def main(quick: bool = True, out_path: str = "BENCH_net.json") -> Dict:
     with timed("netbench"):
         grid, speedup = run_grid(quick)
+        delta = run_delta(quick)
         failover = run_failover(quick)
     out = {
         "quick": quick,
@@ -163,14 +197,18 @@ def main(quick: bool = True, out_path: str = "BENCH_net.json") -> Dict:
         "async_prefetch_speedup": speedup,
         "prefetch_hit_rate":
             grid["async_wan-heterogeneous"]["prefetch"]["hit_rate"],
+        "delta": delta,
+        "delta_bytes_ratio": delta["delta_bytes_ratio"],
         "failover": failover,
     }
     with open(out_path, "w") as f:
         json.dump(out, f, indent=2, sort_keys=True)
     ok = (speedup > 1.0 and out["prefetch_hit_rate"] > 0
+          and delta["delta_bytes_ratio"] <= 0.5
           and failover["reroutes"] >= 1 and failover["completed"])
     emit("net_acceptance", "PASS" if ok else "FAIL",
-         "prefetch speeds up async WAN, hit rate > 0, failover rerouted")
+         "prefetch speeds up async WAN, hit rate > 0, int8-delta <= 0.5x "
+         "WAN bytes from round 2, failover rerouted")
     return out
 
 

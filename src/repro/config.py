@@ -274,9 +274,12 @@ class FedConfig:
     round_deadline_s: float = 0.0      # 0 = no deadline (sync uses barrier)
     scorer_deadline_s: float = 5.0
     heartbeat_s: float = 1.0
-    # compression of exchanged models (beyond-paper)
-    compression: str = "none"          # 'none' | 'int8' | 'topk'
+    # wire format of exchanged models (repro.core.wire; beyond-paper)
+    compression: str = "none"   # 'none' | 'int8' | 'int8-delta' | 'topk-delta'
     topk_frac: float = 0.01
+    # int8-delta noise floor: elide quant tiles whose delta never exceeds
+    # this many base-tile quantization steps (0 disables elision)
+    delta_rtol: float = 1.0
     # simulated store-network fabric; None = instantaneous in-memory store
     net: Optional[NetConfig] = None
 

@@ -7,5 +7,7 @@ scoring     -- accuracy / loss / MultiKRUM scorers (paper §2.6)
 policies    -- aggregation + score policies (paper §3.4.4)
 orchestrator-- Sync / Async round engines with straggler & failure handling
 exchange    -- jittable cross-silo exchange over the 'pod' mesh axis
-compression -- int8 / top-k delta compression for exchanged models
+wire        -- the one model-exchange codec (versioned ModelEnvelope:
+               raw | int8 | int8-delta | topk-delta, base-chain resolution)
+compression -- legacy compression API (thin shims over wire)
 """

@@ -1,120 +1,25 @@
-"""Model-exchange compression (beyond-paper distributed-optimization trick).
+"""Legacy compression API — thin delegation shims over ``repro.core.wire``.
 
-Silo models (or deltas vs. the previous global) are compressed before hitting
-the store / the pod-axis all-gather:
-  - 'int8': symmetric per-tile int8 (Pallas kernel) — 4x fewer bytes than f32.
-  - 'topk': magnitude top-k sparsification of the delta + int8 of survivors.
-Both are self-describing payload pytrees storable in the CAS.
+The codec used to live here in three inconsistent copies (an in-memory
+payload API, the orchestrator's ad-hoc int8 envelope, and keystr sniffing in
+``decode_flat``). All of it is now ``repro.core.wire.ModelEnvelope``; this
+module only preserves the old import surface.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.kernels import ops
+from repro.core import wire
+from repro.core.wire import DecodedModel, decode_flat  # noqa: F401 (re-export)
 
 
-def compress(params, method: str = "int8", *, base=None, topk_frac: float = 0.01):
-    """Returns a payload pytree. base: previous global params (delta coding)."""
-    if method == "none":
-        return {"method": "none", "params": params}
-    vec, spec = ops.flatten_pytree(params)
-    meta = {"n": int(vec.shape[0])}
-    if base is not None:
-        bvec, _ = ops.flatten_pytree(base)
-        vec = vec - bvec
-        meta["delta"] = True
-    if method == "int8":
-        q, s, n = ops.quantize(vec)
-        return {"method": "int8", "q": q, "scales": s, "meta": meta}
-    if method == "topk":
-        k = max(1, int(vec.shape[0] * topk_frac))
-        idx = jnp.argsort(-jnp.abs(vec))[:k]
-        vals = vec[idx]
-        return {"method": "topk", "idx": idx.astype(jnp.int32), "vals": vals,
-                "meta": meta}
-    raise ValueError(f"unknown compression {method!r}")
+def compress(params, method: str = "int8", *, base=None,
+             topk_frac: float = 0.01):
+    return wire.compress_pytree(params, method, base=base,
+                                topk_frac=topk_frac)
 
 
 def decompress(payload, like, *, base=None):
-    method = payload["method"]
-    if method == "none":
-        return payload["params"]
-    _, spec = ops.flatten_pytree(like)
-    n = int(payload["meta"]["n"])
-    if method == "int8":
-        vec = ops.dequantize(payload["q"], payload["scales"], n)
-    elif method == "topk":
-        vec = jnp.zeros((n,), jnp.float32).at[payload["idx"]].set(payload["vals"])
-    else:
-        raise ValueError(method)
-    if payload["meta"].get("delta"):
-        bvec, _ = ops.flatten_pytree(base if base is not None else like)
-        vec = vec + bvec
-    return ops.unflatten_pytree(vec, spec)
+    return wire.decompress_pytree(payload, like, base=base)
 
 
 def payload_bytes(payload) -> int:
-    return sum(np.asarray(l).nbytes for l in jax.tree.leaves(payload))
-
-
-# --------------------------------------------------------------------------- #
-# Decoded-model representation (zero-copy exchange path)
-# --------------------------------------------------------------------------- #
-
-# Exact keystr paths of the int8 store envelope ({"__method__", "n", "q",
-# "scales"} serialized through store.serialize_pytree). Exact-match lookups:
-# substring matching against keystr paths broke on models with a param
-# literally named ``q``.
-ENVELOPE_METHOD = "['__method__']"
-ENVELOPE_N = "['n']"
-ENVELOPE_Q = "['q']"
-ENVELOPE_SCALES = "['scales']"
-
-
-class DecodedModel:
-    """A peer model decoded from its store payload, kept in exchange form.
-
-    Quantized payloads stay as (q int8, per-tile scales) so the fused kernels
-    consume them without ever materializing the f32 vector; ``vec()``
-    dequantizes lazily and memoizes, so a model is dequantized at most once
-    per silo no matter how many scorers/aggregators touch it."""
-
-    __slots__ = ("n", "q", "scales", "_vec")
-
-    def __init__(self, n: int, *, q=None, scales=None, vec=None):
-        self.n = n
-        self.q = q
-        self.scales = scales
-        self._vec = vec
-
-    @property
-    def is_q8(self) -> bool:
-        return self.q is not None
-
-    def vec(self):
-        """Flat f32 [n] view of the model (dequantized once, then cached)."""
-        if self._vec is None:
-            self._vec = ops.dequantize(self.q, self.scales, self.n)
-        return self._vec
-
-
-def decode_flat(flat: Dict[str, np.ndarray]) -> DecodedModel:
-    """Store payload (keystr -> array dict) -> DecodedModel.
-
-    int8 envelopes keep their packed form; raw parameter payloads flatten to
-    one f32 vector (leaf order = jax tree flatten order, matching the
-    flatten spec of the receiving silo's params)."""
-    method = flat.get(ENVELOPE_METHOD)
-    if method is not None and str(np.asarray(method)) == "int8":
-        return DecodedModel(int(np.asarray(flat[ENVELOPE_N])),
-                            q=jnp.asarray(flat[ENVELOPE_Q]),
-                            scales=jnp.asarray(flat[ENVELOPE_SCALES]))
-    if not flat:
-        return DecodedModel(0, vec=jnp.zeros((0,), jnp.float32))
-    vec = jnp.concatenate([jnp.ravel(jnp.asarray(v)).astype(jnp.float32)
-                           for v in flat.values()])
-    return DecodedModel(int(vec.shape[0]), vec=vec)
+    return wire.payload_bytes(payload)

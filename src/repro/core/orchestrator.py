@@ -23,8 +23,7 @@ import jax
 import numpy as np
 
 from repro.config import FedConfig
-from repro.core import compression
-from repro.core.compression import decode_flat
+from repro.core import wire
 from repro.core.contract import UnifyFLContract
 from repro.core.ledger import Ledger
 from repro.core.policies import select_models
@@ -45,7 +44,7 @@ class SiloPolicy:
 class SiloRuntime:
     """One organization: cluster + store node + ledger client."""
 
-    def __init__(self, cluster: Cluster, store: StoreNode, ledger: Ledger,
+    def __init__(self, cluster: Cluster, store: StoreNode,
                  contract: UnifyFLContract, env: SimEnv, fed: FedConfig, *,
                  policy: Optional[SiloPolicy] = None,
                  extra_train_delay: float = 0.0,
@@ -53,7 +52,7 @@ class SiloRuntime:
                  time_scale: float = 1.0):
         self.cluster = cluster
         self.store = store
-        self.ledger = ledger
+        self.ledger: Optional[Ledger] = None  # bound late via bind_ledger
         self.contract = contract
         self.env = env
         self.fed = fed
@@ -65,6 +64,9 @@ class SiloRuntime:
         self.alive = True
         self.rounds_done = 0
         self.last_cid: Optional[str] = None
+        # the silo's last announced model CID: the delta-coding base its next
+        # envelope references (receivers resolve it from their own stores)
+        self.last_global_cid: Optional[str] = None
         self.last_self_score = float("-inf")
         self.metrics: List[Dict] = []
         self.scorer_fn = make_scorer(fed.scorer) if fed.scorer != "multikrum" \
@@ -76,6 +78,10 @@ class SiloRuntime:
     @property
     def silo_id(self) -> str:
         return self.cluster.silo_id
+
+    def bind_ledger(self, ledger: Ledger):
+        """Late-bind the shared ledger (created once all silos are added)."""
+        self.ledger = ledger
 
     def register(self):
         self.ledger.submit(self.silo_id, "register",
@@ -97,10 +103,11 @@ class SiloRuntime:
             self._flat_spec = ops.make_flatten_spec(self.cluster.params)
         return self._flat_spec
 
-    def get_decoded(self, cid: str) -> compression.DecodedModel:
+    def get_decoded(self, cid: str) -> wire.DecodedModel:
         """Pull a peer model via the store's decoded cache: fetched/decoded at
-        most once per silo, int8 payloads kept packed for the fused kernels."""
-        return self.store.get_decoded(cid, decode_flat)
+        most once per silo, int8 payloads kept packed for the fused kernels,
+        delta envelopes wired to resolve their base chain through the store."""
+        return self.store.get_decoded(cid, self.store.wire_decoder())
 
     def pull_and_merge(self):
         """Paper step 4-5: query orchestrator, pick models by policy, merge.
@@ -122,7 +129,10 @@ class SiloRuntime:
         peers = []
         for c in picked:  # may hit IPFS peers over the fabric
             try:
-                peers.append(self.get_decoded(c.cid))
+                dm = self.get_decoded(c.cid)
+                if dm.needs_base:
+                    dm.vec()  # resolve the delta base chain (may fetch)
+                peers.append(dm)
             except (KeyError, IOError):
                 self.env.trace.append(
                     (self.env.now, f"{self.silo_id}:pull-fail:{c.cid[:8]}"))
@@ -135,14 +145,25 @@ class SiloRuntime:
         self.cluster.params = ops.unflatten_pytree(new_vec, self.flat_spec())
         return len(peers)
 
+    def _delta_base(self):
+        """(base_cid, base_vec) for delta coding: the silo's last announced
+        model *as receivers decode it* (pulled through this silo's own
+        decoded cache, so quantization error never compounds)."""
+        if self.last_global_cid is None or \
+                not wire.resolve_method(self.fed.compression).endswith("-delta"):
+            return ("", None)
+        try:
+            return (self.last_global_cid,
+                    self.get_decoded(self.last_global_cid).vec())
+        except (KeyError, IOError):
+            return ("", None)
+
     def _encode(self):
-        params = self.cluster.params
-        if self.fed.compression == "int8":
-            vec, _ = ops.flatten_pytree(params, self.flat_spec())
-            q, s, n = ops.quantize(vec)
-            return {"__method__": np.asarray("int8"), "q": np.asarray(q),
-                    "scales": np.asarray(s), "n": np.asarray(n)}
-        return params
+        """Wire-encode this silo's params — ``repro.core.wire`` is the one
+        codec path (raw | int8 | int8-delta | topk-delta envelopes)."""
+        return wire.encode_update(self.cluster.params, self.fed,
+                                  spec=self.flat_spec(),
+                                  base=self._delta_base()).to_store()
 
     def train_and_submit(self, on_done: Callable):
         """Run a local FL round; put weights in the store; submit the CID."""
@@ -159,12 +180,16 @@ class SiloRuntime:
         def finish():
             if not self.alive:
                 return
-            cid = self.store.put(self._encode())
+            payload = self._encode()
+            cid = self.store.put(payload)
             self.last_cid = cid
+            self.last_global_cid = cid
             fab = self.store.fabric
             if fab is not None:
-                # advertise the fresh CID: gossip replication + peer prefetch
-                fab.announce(cid, self.silo_id)
+                # advertise the fresh CID (and its delta base, so replication
+                # and prefetch can move the base chain alongside the delta)
+                fab.announce(cid, self.silo_id,
+                             base_cid=wire.base_cid_of(payload))
             ev = self.cluster.evaluate()
             self.last_self_score = ev["accuracy"] if self.fed.scorer != "loss" \
                 else -ev["loss"]
@@ -185,6 +210,7 @@ class SiloRuntime:
         t0 = time.perf_counter()
         try:
             dm = self.get_decoded(cid)
+            dm.vec()  # resolve (and, for deltas, fetch) the full model now
         except (KeyError, IOError):
             # model unreachable (partition/churn): give up this assignment
             self.env.trace.append(
@@ -254,10 +280,13 @@ class BaseOrchestrator:
         self.prefetcher = None
         self.gossip = None
         self._fault_injector = None
+        # per-round marks: {round, silo, t, wan_bytes} — netbench derives
+        # per-round WAN byte deltas from these
+        self.round_log: List[Dict] = []
 
     def add_silo(self, cluster: Cluster, **kw) -> SiloRuntime:
         store = self.network.add_node(cluster.silo_id)
-        silo = SiloRuntime(cluster, store, None, self.contract, self.env,
+        silo = SiloRuntime(cluster, store, self.contract, self.env,
                            self.fed, **kw)
         self.silos.append(silo)
         return silo
@@ -277,7 +306,6 @@ class BaseOrchestrator:
             self.fabric.subscribe(self.gossip.on_announce)
         if net.prefetch:
             self.prefetcher = Prefetcher(self.fabric, self.network,
-                                         decode_flat,
                                          delay_s=net.prefetch_delay_s)
             self.fabric.subscribe(self.prefetcher.on_announce)
         if net.scenarios:
@@ -302,8 +330,20 @@ class BaseOrchestrator:
                              path=self._ledger_path)
         self.ledger.attach_contract(self.contract)
         for s in self.silos:
-            s.ledger = self.ledger
+            s.bind_ledger(self.ledger)
             s.register()
+
+    def _by_id(self, sid) -> Optional[SiloRuntime]:
+        for s in self.silos:
+            if s.silo_id == sid:
+                return s
+        return None
+
+    def _mark_round(self, rnd: int, silo_id: Optional[str] = None):
+        """Log a round boundary with the fabric's cumulative WAN bytes."""
+        self.round_log.append(
+            {"round": rnd, "silo": silo_id, "t": self.env.now,
+             "wan_bytes": self.fabric.stats["bytes"] if self.fabric else 0})
 
     def live(self) -> List[SiloRuntime]:
         return [s for s in self.silos if s.alive]
@@ -380,6 +420,7 @@ class SyncOrchestrator(BaseOrchestrator):
             for s in self.live():
                 s.rounds_done = r
                 s.checkpoint()
+            self._mark_round(r)
         return self.summary()
 
     def _score_multikrum(self, r: int):
@@ -394,7 +435,10 @@ class SyncOrchestrator(BaseOrchestrator):
         reachable, decoded = [], []
         for e in entries:
             try:
-                decoded.append(silo0.get_decoded(e.cid))
+                dm = silo0.get_decoded(e.cid)
+                if dm.needs_base:
+                    dm.vec()  # resolve the delta base chain (may fetch)
+                decoded.append(dm)
                 reachable.append(e)
             except (KeyError, IOError):
                 self.env.trace.append(
@@ -422,12 +466,6 @@ class SyncOrchestrator(BaseOrchestrator):
                     if rs and rs.alive:
                         rs.score_async(e.cid, e.owner)
 
-    def _by_id(self, sid) -> Optional[SiloRuntime]:
-        for s in self.silos:
-            if s.silo_id == sid:
-                return s
-        return None
-
 
 class AsyncOrchestrator(BaseOrchestrator):
     """Independent silo loops (paper §3.3): no phase barrier; the contract
@@ -450,11 +488,17 @@ class AsyncOrchestrator(BaseOrchestrator):
         def loop(silo: SiloRuntime):
             if not silo.alive or silo.rounds_done >= rounds:
                 return
+            # round-phased fault injection (ROADMAP follow-on): the first
+            # silo entering round r fires that round's "train" scenarios
+            self._net_phase(silo.rounds_done + 1, "train")
             silo.pull_and_merge()
 
             def done(s, cid):
                 s.rounds_done += 1
+                # ... and the first silo *finishing* round r fires "score"
+                self._net_phase(s.rounds_done, "score")
                 s.checkpoint()
+                self._mark_round(s.rounds_done, s.silo_id)
                 self.env.schedule(0.0, lambda: loop(s), f"{s.silo_id}:loop")
 
             silo.train_and_submit(done)
@@ -463,9 +507,3 @@ class AsyncOrchestrator(BaseOrchestrator):
             self.env.schedule(0.0, lambda s=s: loop(s), f"{s.silo_id}:start")
         self.env.run()
         return self.summary()
-
-    def _by_id(self, sid) -> Optional[SiloRuntime]:
-        for s in self.silos:
-            if s.silo_id == sid:
-                return s
-        return None

@@ -103,7 +103,13 @@ class StoreNode:
         self._pins: set = set()
         self._peers: List["StoreNode"] = []
         self._lock = threading.Lock()
-        self._decoded: "OrderedDict[str, Any]" = OrderedDict()
+        # decoded-model cache, keyed (cid, resolved_base): a delta envelope's
+        # decoded form depends on its base chain, so the base CID is part of
+        # the identity; _decoded_cids indexes cid -> full key (1:1 — content
+        # addressing fixes the base a cid resolves against)
+        self._decoded: "OrderedDict[Tuple[str, str], Any]" = OrderedDict()
+        self._decoded_cids: Dict[str, Tuple[str, str]] = {}
+        self._wire_decoder: Optional[Callable] = None
         self._prefetched: set = set()
         self._pending_net_time = 0.0
         self.stats = {"puts": 0, "gets": 0, "peer_fetches": 0,
@@ -117,6 +123,20 @@ class StoreNode:
     @property
     def fabric(self):
         return self.network.fabric if self.network is not None else None
+
+    def wire_decoder(self) -> Callable:
+        """Node-bound ``repro.core.wire`` decoder: delta envelopes resolve
+        their base chain through this node's decoded cache, fetching missing
+        base CIDs over the fabric like any other content."""
+        if self._wire_decoder is None:
+            from repro.core.wire import decode_store
+
+            def _dec(flat):
+                return decode_store(
+                    flat, resolver=lambda bcid: self.get_decoded(bcid, _dec))
+
+            self._wire_decoder = _dec
+        return self._wire_decoder
 
     # -- network wiring ---------------------------------------------------- #
     def connect(self, peer: "StoreNode"):
@@ -265,65 +285,72 @@ class StoreNode:
     def get(self, cid: str, like=None):
         return deserialize_pytree(self.get_bytes(cid), like)
 
+    # -- decoded-model cache (lock held for all three helpers) -------------- #
+    def _cache_lookup(self, cid: str):
+        """Hit path: returns the cached object or None (updates stats)."""
+        key = self._decoded_cids.get(cid)
+        if key is None:
+            return None
+        self.stats["decode_hits"] += 1
+        if cid in self._prefetched:
+            # one hit per prefetched CID: "the prefetch was useful"
+            self.stats["prefetch_hits"] += 1
+            self._prefetched.discard(cid)
+        self._decoded.move_to_end(key)
+        return self._decoded[key]
+
+    def _cache_insert(self, cid: str, obj):
+        key = (cid, getattr(obj, "base_cid", "") or "")
+        self.stats["decodes"] += 1
+        self._decoded[key] = obj
+        self._decoded_cids[cid] = key
+        while len(self._decoded) > DECODED_CACHE_MAX:
+            (ecid, _), _ = self._decoded.popitem(last=False)
+            self._decoded_cids.pop(ecid, None)
+            self._prefetched.discard(ecid)
+
     def get_decoded(self, cid: str, decoder: Callable):
         """Zero-copy exchange: fetch + ``decoder(payload)`` once per CID.
 
         Content addressing makes blocks immutable, so the decoded form (e.g.
-        the unpacked int8 vector of a peer model) is safely cached: a model
+        the unpacked int8 payload of a peer model) is safely cached: a model
         pulled by k scorers and then re-pulled for aggregation is
         deserialized exactly once on this node (``stats['decodes']``); the
-        other k-1+ touches are ``stats['decode_hits']``. Bounded LRU."""
+        other k-1+ touches are ``stats['decode_hits']``. Bounded LRU keyed
+        on ``(cid, resolved_base)``."""
         with self._lock:
-            if cid in self._decoded:
-                self.stats["decode_hits"] += 1
-                if cid in self._prefetched:
-                    # one hit per prefetched CID: "the prefetch was useful"
-                    self.stats["prefetch_hits"] += 1
-                    self._prefetched.discard(cid)
-                self._decoded.move_to_end(cid)
-                return self._decoded[cid]
+            hit = self._cache_lookup(cid)
+            if hit is not None:
+                return hit
         obj = decoder(self.get(cid))
         with self._lock:
             # decode ran unlocked: a concurrent miss may have won the race —
             # keep its object so all callers share one decoded model
-            if cid in self._decoded:
-                self.stats["decode_hits"] += 1
-                if cid in self._prefetched:
-                    # one hit per prefetched CID: "the prefetch was useful"
-                    self.stats["prefetch_hits"] += 1
-                    self._prefetched.discard(cid)
-                self._decoded.move_to_end(cid)
-                return self._decoded[cid]
-            self.stats["decodes"] += 1
-            self._decoded[cid] = obj
-            while len(self._decoded) > DECODED_CACHE_MAX:
-                evicted, _ = self._decoded.popitem(last=False)
-                self._prefetched.discard(evicted)
+            hit = self._cache_lookup(cid)
+            if hit is not None:
+                return hit
+            self._cache_insert(cid, obj)
         return obj
 
     def has_decoded(self, cid: str) -> bool:
         with self._lock:
-            return cid in self._decoded
+            return cid in self._decoded_cids
 
     def warm_decoded(self, cid: str, decoder: Callable):
         """Prefetch landing: decode a locally-present CID into the cache and
         mark it, so the eventual consumer's hit counts as a prefetch hit. If
         something already decoded it, leave the attribution alone."""
         with self._lock:
-            if cid in self._decoded:
+            if cid in self._decoded_cids:
                 return
         data = self.read_local(cid)
         if data is None:
             return
         obj = decoder(deserialize_pytree(data))
         with self._lock:
-            if cid not in self._decoded:
-                self.stats["decodes"] += 1
-                self._decoded[cid] = obj
+            if cid not in self._decoded_cids:
+                self._cache_insert(cid, obj)
                 self._prefetched.add(cid)
-                while len(self._decoded) > DECODED_CACHE_MAX:
-                    evicted, _ = self._decoded.popitem(last=False)
-                    self._prefetched.discard(evicted)
 
     def pin(self, cid: str):
         self._pins.add(cid)

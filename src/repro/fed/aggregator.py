@@ -12,7 +12,7 @@ from typing import List, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.compression import DecodedModel
+from repro.core.wire import DecodedModel
 from repro.kernels import ops
 from repro.optim.fedopt import ServerOptimizer, make_server_optimizer
 

@@ -154,6 +154,20 @@ def weighted_sum_q8(q, scales, w, n: int = None, force: str = "auto"):
     return _q8.wsum_q8(qp, sp, w, interpret=_interpret())[:n]
 
 
+def add_q8_delta(base, q, scales, n: int = None, force: str = "auto"):
+    """Fused delta-apply: base [n] f32 + dequantized int8 delta, one pass.
+    q: [Np] int8 (Np % QTILE == 0), scales: [Np/QTILE] -> [n] f32 without
+    materializing the f32 delta (n defaults to len(base))."""
+    n = int(base.shape[0]) if n is None else n
+    assert q.shape[0] % QTILE == 0, f"delta payload must be {QTILE}-aligned"
+    if force == "ref":
+        return _ref.add_q8_delta(base[:n], q, scales, QTILE)
+    qp = _pad_to(q, 0, QUANT_BLOCK)
+    sp = _pad_to(scales, 0, QUANT_BLOCK // QTILE)
+    bp = jnp.pad(base[:n].astype(jnp.float32), (0, qp.shape[0] - n))
+    return _q8.add_q8_delta(bp, qp, sp, interpret=_interpret())[:n]
+
+
 def pairwise_dists_q8(q, scales, force: str = "auto"):
     """Fused dequantize + pairwise squared L2 of quantized models [M, M]."""
     if force == "ref":

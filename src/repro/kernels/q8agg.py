@@ -33,6 +33,7 @@ from repro.kernels import quant as _q
 QT = _q.TILE          # quantization tile (scale granularity), 1024
 QPB = 4               # quant tiles per VMEM block
 TILE_N = QPB * QT     # kernel block width along N
+LANE = _q.LANE        # quant tiles per VMEM block in the quantizer layout
 
 
 def _wsum_kernel(w_ref, q_ref, s_ref, o_ref):
@@ -64,6 +65,35 @@ def wsum_q8(q, scales, w, *, interpret: bool = False):
         interpret=interpret,
     )(w.astype(jnp.float32)[None, :], q, scales)
     return out[0]
+
+
+def _add_delta_kernel(b_ref, q_ref, s_ref, o_ref):
+    """b_ref/o_ref: [LANE, QT] f32; q_ref: [LANE, QT] int8; s_ref: [LANE, 1].
+    Dequantization fuses into the add: the f32 delta never hits HBM."""
+    o_ref[...] = b_ref[...] + q_ref[...].astype(jnp.float32) * s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def add_q8_delta(base, q, scales, *, interpret: bool = False):
+    """base: [N] f32; q: [N] int8 delta (N % (QT*LANE) == 0);
+    scales: [N/QT] f32 -> [N] f32 = base + dequantized delta, one pass."""
+    N = q.shape[0]
+    assert N % (QT * LANE) == 0, f"pad N to a multiple of {QT * LANE}"
+    assert base.shape == (N,) and scales.shape == (N // QT,)
+    rows = N // QT
+    grid = (rows // LANE,)
+    out = pl.pallas_call(
+        _add_delta_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((LANE, QT), lambda i: (i, 0)),
+                  pl.BlockSpec((LANE, QT), lambda i: (i, 0)),
+                  pl.BlockSpec((LANE, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((LANE, QT), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, QT), jnp.float32),
+        interpret=interpret,
+    )(base.astype(jnp.float32).reshape(rows, QT), q.reshape(rows, QT),
+      scales[:, None])
+    return out.reshape(-1)
 
 
 def _gram_kernel(q_ref, s_ref, g_ref, sq_ref):

@@ -46,6 +46,14 @@ def dequantize_int8(q, scales, tile: int = 1024):
     return (qt * scales[:, None]).reshape(-1)
 
 
+def add_q8_delta(base, q, scales, tile: int = 1024):
+    """Oracle for the fused int8 delta-apply: materialize the dequantized f32
+    delta (the copy the fused kernel avoids), then add. base: [n] (n <= Np),
+    q: [Np] int8, scales: [Np/tile] -> [n] f32."""
+    d = dequantize_int8(q, scales, tile)
+    return base.astype(jnp.float32) + d[: base.shape[0]]
+
+
 def dequantize_rows(q, scales, tile: int = 1024):
     """q: [M, N] int8, scales: [M, N/tile] -> [M, N] f32."""
     M, N = q.shape

@@ -42,7 +42,9 @@ def main(argv=None):
     p.add_argument("--k", type=int, default=2)
     p.add_argument("--partition", choices=["iid", "niid"], default="niid")
     p.add_argument("--alpha", type=float, default=0.5)
-    p.add_argument("--compression", choices=["none", "int8"], default="none")
+    p.add_argument("--compression",
+                   choices=["none", "int8", "int8-delta", "topk-delta"],
+                   default="none")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--out", default=None)
     args = p.parse_args(argv)

@@ -124,16 +124,18 @@ class NetFabric:
         return bool(self._providers.get(cid))
 
     # -- announcements ------------------------------------------------------ #
-    def subscribe(self, fn: Callable[[str, str, int], None]) -> None:
-        """fn(cid, owner, nbytes) fires on every announced CID."""
+    def subscribe(self, fn: Callable[..., None]) -> None:
+        """fn(cid, owner, nbytes, base_cid='') fires on every announced CID."""
         self._subscribers.append(fn)
 
-    def announce(self, cid: str, owner: str) -> None:
+    def announce(self, cid: str, owner: str, base_cid: str = "") -> None:
         """Owner advertises a fresh CID (a submitted model): gossip + prefetch
-        subscribers react. Plain puts only ``publish`` provider records."""
+        subscribers react. ``base_cid`` names the delta-coding base so the
+        subscribers can move the base chain alongside the delta envelope.
+        Plain puts only ``publish`` provider records."""
         nbytes = self.size_of(cid)
         for fn in list(self._subscribers):
-            fn(cid, owner, nbytes)
+            fn(cid, owner, nbytes, base_cid)
 
     # -- reachability / faults ---------------------------------------------- #
     def reachable(self, a: str, b: str) -> bool:
@@ -252,6 +254,10 @@ class NetFabric:
         self.env.schedule(charged, land,
                           f"net:land:{kind}:{dst}:{cid[:_CID_W]}", key=key)
         return charged
+
+    def in_flight(self, key: Any) -> bool:
+        """Is a keyed async transfer still in flight (not landed/cancelled)?"""
+        return key in self._inflight
 
     # -- replica selection -------------------------------------------------- #
     def best_provider(self, dst: str, cid: str,

@@ -52,6 +52,7 @@ class FaultInjector:
         self.scenarios = tuple(scenarios)
         self.on_down = on_down
         self.on_up = on_up
+        self._round_fired: set = set()  # scenario indices already applied
 
     def schedule_timed(self) -> None:
         """Arm every ``at_time`` scenario on the fabric's SimEnv."""
@@ -63,9 +64,13 @@ class FaultInjector:
                              f"net:fault:{sc.action}:{sc.node}")
 
     def on_phase(self, rnd: int, when: str) -> None:
-        """Fire round-phased scenarios (Sync engine hook)."""
-        for sc in self.scenarios:
-            if sc.at_time < 0.0 and sc.round == rnd and sc.when == when:
+        """Fire round-phased scenarios. Sync calls this once per (round,
+        phase); the Async engine calls it on every silo's round transition,
+        so each scenario is guarded to fire exactly once."""
+        for i, sc in enumerate(self.scenarios):
+            if sc.at_time < 0.0 and sc.round == rnd and sc.when == when \
+                    and i not in self._round_fired:
+                self._round_fired.add(i)
                 self._apply(sc)
 
     def _apply(self, sc: FaultScenario) -> None:

@@ -22,7 +22,8 @@ class GossipReplicator:
         self.factor = int(factor)
         self.stats = {"pushes": 0, "landed": 0, "skipped": 0, "failed": 0}
 
-    def on_announce(self, cid: str, owner: str, nbytes: int) -> None:
+    def on_announce(self, cid: str, owner: str, nbytes: int,
+                    base_cid: str = "") -> None:
         if self.factor <= 0:
             return
         src_node = self.network.nodes.get(owner)
@@ -30,22 +31,33 @@ class GossipReplicator:
             return
         for peer_id in self.fabric.nearest(owner, self.factor):
             peer = self.network.nodes.get(peer_id)
-            if peer is None or peer.has(cid):
+            if peer is None:
                 self.stats["skipped"] += 1
                 continue
-            data = src_node.serve_bytes(cid)
-            if data is None:
-                self.stats["failed"] += 1
-                return
+            # a delta envelope is useless without its base: push the base
+            # first if the peer lacks it (normally a skip — the base was
+            # last round's announce), then the delta. The fabric is only
+            # ever charged the bytes each envelope actually carries.
+            for c in ((base_cid, cid) if base_cid else (cid,)):
+                self._push(src_node, peer, peer_id, c)
 
-            def land(peer=peer, data=data):
-                peer.ingest(cid, data)
-                self.stats["landed"] += 1
+    def _push(self, src_node, peer, peer_id: str, cid: str) -> None:
+        if peer.has(cid):
+            self.stats["skipped"] += 1
+            return
+        data = src_node.serve_bytes(cid)
+        if data is None:
+            self.stats["failed"] += 1
+            return
 
-            try:
-                self.fabric.transfer_async(owner, peer_id, cid, len(data),
-                                           land, kind="replicate",
-                                           key=("replicate", peer_id, cid))
-                self.stats["pushes"] += 1
-            except UnreachableError:
-                self.stats["failed"] += 1
+        def land(peer=peer, data=data):
+            peer.ingest(cid, data)
+            self.stats["landed"] += 1
+
+        try:
+            self.fabric.transfer_async(src_node.node_id, peer_id, cid,
+                                       len(data), land, kind="replicate",
+                                       key=("replicate", peer_id, cid))
+            self.stats["pushes"] += 1
+        except UnreachableError:
+            self.stats["failed"] += 1

@@ -18,36 +18,52 @@ Semantics:
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Optional
 
 from repro.net.fabric import NetFabric, UnreachableError
 
 
 class Prefetcher:
-    def __init__(self, fabric: NetFabric, network, decoder: Callable, *,
+    def __init__(self, fabric: NetFabric, network,
+                 decoder: Optional[Callable] = None, *,
                  delay_s: float = 0.0):
         self.fabric = fabric
         self.network = network          # StoreNetwork (duck-typed: .nodes)
+        # None -> each node's own wire decoder (delta base chains resolve
+        # through that node's decoded cache)
         self.decoder = decoder
         self.delay_s = float(delay_s)
         self.stats = {"issued": 0, "completed": 0, "skipped": 0, "failed": 0}
 
     # fabric announce subscriber ------------------------------------------- #
-    def on_announce(self, cid: str, owner: str, nbytes: int) -> None:
+    def on_announce(self, cid: str, owner: str, nbytes: int,
+                    base_cid: str = "") -> None:
         for nid in list(self.network.nodes):
             if nid == owner:
                 continue
             self.stats["issued"] += 1
             self.fabric.env.schedule(
-                self.delay_s, lambda nid=nid: self._fire(nid, cid),
+                self.delay_s,
+                lambda nid=nid: self._fire(nid, cid, base_cid),
                 f"net:prefetch-start:{nid}:{cid[:12]}",
                 key=("prefetch-start", nid, cid))
 
-    def _fire(self, nid: str, cid: str) -> None:
+    def _fire(self, nid: str, cid: str, base_cid: str = "") -> None:
         node = self.network.nodes.get(nid)
         if node is None or not self.fabric.is_up(nid):
             self.stats["failed"] += 1
             return
+        if base_cid and not (node.has(base_cid)
+                             or node.has_decoded(base_cid)
+                             or self.fabric.in_flight(
+                                 ("prefetch", nid, base_cid))):
+            # a delta envelope reconstructs against its base chain: pull the
+            # missing base in the same training window (normally a no-op —
+            # the base is last round's announce, already landed or still in
+            # flight here; re-issuing would collide on the transfer key and
+            # break churn cancellation)
+            self.stats["issued"] += 1
+            self._fire(nid, base_cid)
         if node.has(cid) or node.has_decoded(cid):
             # a scorer already pulled it the moment it was announced — the
             # cache is warm without us
@@ -62,7 +78,7 @@ class Prefetcher:
 
         def land(node=node, data=data):
             node.ingest(cid, data, prefetched=True)
-            node.warm_decoded(cid, self.decoder)
+            node.warm_decoded(cid, self.decoder or node.wire_decoder())
             self.stats["completed"] += 1
 
         try:

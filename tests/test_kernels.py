@@ -83,6 +83,34 @@ def test_quant_matches_ref():
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
 
 
+@pytest.mark.parametrize("n", [qk.TILE * qk.LANE, 300_000])
+def test_add_q8_delta_matches_ref(n):
+    """Fused base + int8-delta apply vs the dequantize-then-add oracle."""
+    key = jax.random.PRNGKey(n)
+    base = jax.random.normal(key, (n,)) * 2.0
+    delta = jax.random.normal(jax.random.fold_in(key, 1), (n,)) * 0.05
+    q, s, _ = ops.quantize(delta)
+    fused = ops.add_q8_delta(base, q, s, n)
+    oracle = ops.add_q8_delta(base, q, s, n, force="ref")
+    assert fused.shape == (n,)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(oracle),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_add_q8_delta_within_quant_error_of_f32():
+    """base + deq(quant(delta)) stays within per-tile quant error of the
+    true base + delta."""
+    n = 5000
+    key = jax.random.PRNGKey(5)
+    base = jax.random.normal(key, (n,))
+    delta = jax.random.normal(jax.random.fold_in(key, 1), (n,)) * 0.1
+    q, s, _ = ops.quantize(delta)
+    out = ops.add_q8_delta(base, q, s, n)
+    amax = float(jnp.max(jnp.abs(delta)))
+    err = float(jnp.max(jnp.abs(out - (base + delta))))
+    assert err <= amax / 127.0 * 0.51 + 1e-6
+
+
 @pytest.mark.parametrize("B,T,H,hs", [(1, 32, 1, 8), (2, 64, 2, 16),
                                       (1, 96, 4, 32), (3, 33, 2, 16)])
 def test_wkv6_kernel_vs_naive(B, T, H, hs):

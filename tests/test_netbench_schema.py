@@ -22,7 +22,7 @@ def test_bench_net_schema(bench):
     assert written["quick"] is True
     assert set(written) == {"quick", "config", "scenarios",
                             "async_prefetch_speedup", "prefetch_hit_rate",
-                            "failover"}
+                            "delta", "delta_bytes_ratio", "failover"}
     expected_scenarios = {"sync_lan", "sync_wan-heterogeneous", "async_lan",
                           "async_wan-heterogeneous",
                           "async_wan-heterogeneous_noprefetch"}
@@ -41,6 +41,12 @@ def test_bench_net_schema(bench):
                     "hit_rate"} <= set(row["prefetch"])
     assert {"reroutes", "origin_model_scored",
             "completed"} <= set(written["failover"])
+    delta = written["delta"]
+    assert set(delta["per_round_wan_bytes"]) == {"int8", "int8-delta"}
+    for rows in delta["per_round_wan_bytes"].values():
+        assert len(rows) >= 2 and all(b > 0 for b in rows)
+    assert len(delta["per_round_ratios"]) == \
+        len(delta["per_round_wan_bytes"]["int8"]) - 1
 
 
 def test_bench_net_acceptance(bench):
@@ -56,3 +62,7 @@ def test_bench_net_acceptance(bench):
     assert written["failover"]["completed"]
     assert written["failover"]["reroutes"] >= 1
     assert written["failover"]["origin_model_scored"]
+    # tile-sparse int8-delta envelopes cut steady-state WAN bytes >= 2x vs
+    # whole-model int8 (round 1 has no base and ships whole — exempt)
+    assert written["delta_bytes_ratio"] <= 0.5
+    assert all(r <= 0.5 for r in written["delta"]["per_round_ratios"])
