@@ -3,7 +3,7 @@
 PYTHON ?= python
 PYTEST_ARGS ?=
 
-.PHONY: verify netbench kernelbench
+.PHONY: verify netbench kernelbench scorebench
 
 verify:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q $(PYTEST_ARGS)
@@ -13,3 +13,6 @@ netbench:
 
 kernelbench:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.kernelbench
+
+scorebench:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.scorebench --quick

@@ -17,19 +17,20 @@ from __future__ import annotations
 import random
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import numpy as np
 
-from repro.config import FedConfig
+from repro.config import SCORERS, FedConfig
 from repro.core import wire
 from repro.core.contract import UnifyFLContract
 from repro.core.ledger import Ledger
 from repro.core.policies import select_models
-from repro.core.scoring import make_scorer, multikrum_scores_for_decoded
+from repro.core.scoring import multikrum_scores_for_decoded
 from repro.core.simenv import SimEnv
 from repro.core.store import StoreNetwork, StoreNode
+from repro.fed import scorebatch
 from repro.fed.cluster import Cluster
 from repro.kernels import ops
 
@@ -69,8 +70,13 @@ class SiloRuntime:
         self.last_global_cid: Optional[str] = None
         self.last_self_score = float("-inf")
         self.metrics: List[Dict] = []
-        self.scorer_fn = make_scorer(fed.scorer) if fed.scorer != "multikrum" \
-            else make_scorer("accuracy")
+        if fed.scorer not in SCORERS:
+            raise ValueError(f"unknown scorer {fed.scorer!r} "
+                             f"(choose from {SCORERS})")
+        # per-model scoring method fed to the batched engine (multikrum is
+        # round-level; its per-model fallback is accuracy, as before)
+        self.score_method = fed.scorer if fed.scorer in ("accuracy", "loss") \
+            else "accuracy"
         self._rng = random.Random(cluster.silo_id)
         self._flat_spec = None  # cached flatten spec of this config's params
 
@@ -189,7 +195,7 @@ class SiloRuntime:
                 # advertise the fresh CID (and its delta base, so replication
                 # and prefetch can move the base chain alongside the delta)
                 fab.announce(cid, self.silo_id,
-                             base_cid=wire.base_cid_of(payload))
+                             base_cid=wire.base_cid_of_store(payload))
             ev = self.cluster.evaluate()
             self.last_self_score = ev["accuracy"] if self.fed.scorer != "loss" \
                 else -ev["loss"]
@@ -202,24 +208,39 @@ class SiloRuntime:
         self.env.schedule(duration, finish, f"{self.silo_id}:submit")
 
     # -- scoring ------------------------------------------------------------- #
-    def score_async(self, cid: str, owner: str):
-        if not self.alive or owner == self.silo_id:
+    def score_round(self, cids: Sequence[str]):
+        """Score every assigned CID of a round in ONE batched engine pass.
+
+        All K pulled models stack through the wire layer's q8-direct ingest
+        and evaluate in a single scan x vmap jit with one device→host
+        transfer; the per-model scores fan back into the ledger unchanged.
+        The simulated score ``duration`` derives from the measured batched
+        cost, so Sync/Async timing stays honest — the scorer is busy for
+        the whole batch and its K scores land together."""
+        cids = [c for c in cids]
+        if not self.alive or not cids:
             return
         self.ledger.submit(self.silo_id, "set_busy", busy=True,
                            logical_time=self.env.now)
         t0 = time.perf_counter()
-        try:
-            dm = self.get_decoded(cid)
-            dm.vec()  # resolve (and, for deltas, fetch) the full model now
-        except (KeyError, IOError):
-            # model unreachable (partition/churn): give up this assignment
-            self.env.trace.append(
-                (self.env.now, f"{self.silo_id}:score-fetch-fail:{cid[:8]}"))
+        decoded, kept = [], []
+        for cid in cids:
+            try:
+                dm = self.get_decoded(cid)
+                if dm.needs_base:
+                    dm.vec()  # resolve (and, for deltas, fetch) the base now
+                decoded.append(dm)
+                kept.append(cid)
+            except (KeyError, IOError):
+                # model unreachable (partition/churn): drop this assignment
+                self.env.trace.append(
+                    (self.env.now, f"{self.silo_id}:score-fetch-fail:{cid[:8]}"))
+        if not kept:
             self.ledger.submit(self.silo_id, "set_busy", busy=False,
                                logical_time=self.env.now)
             return
-        params = ops.unflatten_pytree(dm.vec(), self.flat_spec())
-        score = self.scorer_fn(self.cluster, params)
+        scores = scorebatch.score_round_batch(
+            self.cluster, decoded, self.flat_spec(), method=self.score_method)
         compute = (time.perf_counter() - t0) * self.time_scale
         duration = compute + self.extra_score_delay \
             + self.store.drain_transfer_time()
@@ -227,12 +248,22 @@ class SiloRuntime:
         def finish():
             if not self.alive:
                 return
-            self.ledger.submit(self.silo_id, "submit_score", cid=cid,
-                               score=float(score), logical_time=self.env.now)
+            for cid, score in zip(kept, scores):
+                self.ledger.submit(self.silo_id, "submit_score", cid=cid,
+                                   score=float(score),
+                                   logical_time=self.env.now)
             self.ledger.submit(self.silo_id, "set_busy", busy=False,
                                logical_time=self.env.now)
 
-        self.env.schedule(duration, finish, f"{self.silo_id}:score:{cid[:8]}")
+        self.env.schedule(duration, finish,
+                          f"{self.silo_id}:score:{kept[0][:8]}x{len(kept)}")
+
+    def score_async(self, cid: str, owner: str):
+        """Single-CID assignment (Async engine / scorer reassignment): a
+        K=1 batch through the same engine."""
+        if owner == self.silo_id:
+            return
+        self.score_round([cid])
 
     # -- checkpoint / restart -------------------------------------------------- #
     def checkpoint(self) -> str:
@@ -397,12 +428,18 @@ class SyncOrchestrator(BaseOrchestrator):
             if self.fed.scorer == "multikrum":
                 self._score_multikrum(r)
             else:
+                # invert cid->scorers into scorer->cids: each scorer makes
+                # ONE batched score_round call for all its assignments
+                by_scorer: Dict[str, List[str]] = {}
                 for cid, scorers in assignments.items():
                     entry = self.contract.models[cid]
                     for sid in scorers:
-                        silo = self._by_id(sid)
-                        if silo and silo.alive:
-                            silo.score_async(cid, entry.owner)
+                        if sid != entry.owner:
+                            by_scorer.setdefault(sid, []).append(cid)
+                for sid in sorted(by_scorer):
+                    silo = self._by_id(sid)
+                    if silo and silo.alive:
+                        silo.score_round(by_scorer[sid])
                 score_deadline = (self.env.now + self.fed.scorer_deadline_s
                                   if self.fed.scorer_deadline_s > 0 else None)
 

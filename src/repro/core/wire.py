@@ -217,9 +217,14 @@ def encode_update(params, fed, *, spec=None,
                       delta_rtol=getattr(fed, "delta_rtol", 1.0))
 
 
-def base_cid_of(payload: Dict) -> str:
-    """The delta-base CID a store payload references ('' when none)."""
-    b = payload.get("base_cid")
+def base_cid_of_store(flat: Dict) -> str:
+    """The delta-base CID a store payload references ('' when none).
+    Accepts both plain-key payload dicts (``to_store`` output) and
+    *serialized* payloads (keystr keys, as returned by
+    ``store.deserialize_pytree`` — the gossip base-chain walk)."""
+    b = flat.get(K_BASE)
+    if b is None:
+        b = flat.get("base_cid")
     return str(np.asarray(b)) if b is not None else ""
 
 

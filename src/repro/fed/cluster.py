@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.fed import scorebatch
 from repro.fed.aggregator import SiloAggregator
 from repro.fed.client import Client
 from repro.models.api import Model
@@ -34,7 +35,6 @@ class Cluster:
         self.params = model.init(jax.random.PRNGKey(seed))
         self.round = 0
         self.history: List[Dict] = []
-        self._eval_fn = None
 
     # ------------------------------------------------------------------ #
     def train_round(self) -> Dict:
@@ -58,38 +58,13 @@ class Cluster:
 
     # ------------------------------------------------------------------ #
     def evaluate(self, params=None) -> Dict[str, float]:
-        """Accuracy/loss of a model on this silo's private test set."""
+        """Accuracy/loss of a model on this silo's private test set.
+
+        Runs through the batched scoring engine with K=1: the whole
+        accumulation (including the correctly-weighted partial batch)
+        happens inside one jitted pass — no per-batch ``float()`` syncs."""
         params = self.params if params is None else params
-        if self._eval_fn is None:
-            model = self.model
-
-            @jax.jit
-            def ev(p, batch):
-                loss, metrics = model.loss(p, batch)
-                return metrics
-
-            self._eval_fn = ev
-        td = self.test_data
-        if "x" in td:
-            losses, accs, n = [], [], len(td["x"])
-            bs = 256
-            for i in range(0, n, bs):
-                batch = {"image": jnp.asarray(td["x"][i:i + bs]),
-                         "label": jnp.asarray(td["y"][i:i + bs])}
-                m = self._eval_fn(params, batch)
-                losses.append(float(m["loss"]) * len(td["x"][i:i + bs]))
-                accs.append(float(m.get("accuracy", 0.0)) * len(td["x"][i:i + bs]))
-            return {"loss": sum(losses) / n, "accuracy": sum(accs) / n}
-        # LM eval: perplexity over a few windows
-        stream, seq = td["tokens"], td.get("seq_len", 128)
-        losses = []
-        for i in range(0, min(len(stream) - seq - 1, 4 * seq), seq):
-            batch = {"tokens": jnp.asarray(stream[None, i:i + seq], jnp.int32),
-                     "targets": jnp.asarray(stream[None, i + 1:i + seq + 1], jnp.int32)}
-            m = self._eval_fn(params, batch)
-            losses.append(float(m["loss"]))
-        loss = float(np.mean(losses)) if losses else 0.0
-        return {"loss": loss, "accuracy": float(np.exp(-loss))}
+        return scorebatch.evaluate_params(self, params)
 
     # ------------------------------------------------------------------ #
     def score_model(self, params, method: str = "accuracy") -> float:

@@ -90,6 +90,28 @@ def unflatten_pytree(vec, spec):
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+def unflatten_batch(mat, spec):
+    """[K, N] f32 -> stacked pytree with leaves [K, *shape] (the batched
+    inverse of ``flatten_batch``): one slice per leaf instead of K separate
+    unflattens, so a whole round of models lands as one vmappable pytree."""
+    treedef, shapes = spec
+    K = mat.shape[0]
+    leaves = []
+    off = 0
+    for shape, dtype in shapes:
+        n = int(np.prod(shape)) if shape else 1
+        leaves.append(jnp.reshape(mat[:, off:off + n],
+                                  (K,) + tuple(shape)).astype(dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def spec_length(spec) -> int:
+    """True (unpadded) flattened length of a flatten spec's pytree."""
+    _, shapes = spec
+    return sum(int(np.prod(shape)) if shape else 1 for shape, _ in shapes)
+
+
 # --------------------------------------------------------------------------- #
 # MultiKRUM
 # --------------------------------------------------------------------------- #
@@ -211,6 +233,17 @@ def dequantize(q, scales, n, dtype=jnp.float32, force: str = "auto"):
     if force == "ref":
         return _ref.dequantize_int8(q, scales, _q.TILE)[:n].astype(dtype)
     return _q.dequantize(q, scales, dtype=dtype, interpret=_interpret())[:n]
+
+
+def dequantize_batch(q, scales, n, dtype=jnp.float32, force: str = "auto"):
+    """Batched dequant: q [K, Np] int8 + scales [K, Np/QTILE] -> [K, n] f32
+    in ONE kernel pass (oracle: ``ref.dequantize_rows``). The scoring
+    engine's q8-direct ingest: a round's packed payloads become one stacked
+    matrix without K per-model dequant dispatches."""
+    if force == "ref":
+        return _ref.dequantize_rows(q, scales, _q.TILE)[:, :n].astype(dtype)
+    return _q.dequantize_batch(q, scales, dtype=dtype,
+                               interpret=_interpret())[:, :n]
 
 
 # --------------------------------------------------------------------------- #

@@ -52,6 +52,30 @@ def quantize(x, *, interpret: bool = False):
 
 
 @functools.partial(jax.jit, static_argnames=("dtype", "interpret"))
+def dequantize_batch(q, scales, *, dtype=jnp.float32, interpret: bool = False):
+    """Batched dequantize: K packed payloads in ONE kernel launch.
+
+    q: [K, N] int8 (N % (TILE*LANE) == 0); scales: [K, N/TILE] -> [K, N].
+    Same VMEM block body as ``dequantize`` with the payload index as the
+    major grid axis — the scoring engine ingests a whole round's q8 models
+    without K separate dispatches (oracle: ``ref.dequantize_rows``)."""
+    K, N = q.shape
+    assert N % (TILE * LANE) == 0, f"pad N to a multiple of {TILE * LANE}"
+    rows = N // TILE
+    grid = (K, rows // LANE)
+    x = pl.pallas_call(
+        _dq_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, LANE, TILE), lambda k, i: (k, i, 0)),
+                  pl.BlockSpec((1, LANE, 1), lambda k, i: (k, i, 0))],
+        out_specs=pl.BlockSpec((1, LANE, TILE), lambda k, i: (k, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((K, rows, TILE), dtype),
+        interpret=interpret,
+    )(q.reshape(K, rows, TILE), scales[:, :, None])
+    return x.reshape(K, N)
+
+
+@functools.partial(jax.jit, static_argnames=("dtype", "interpret"))
 def dequantize(q, scales, *, dtype=jnp.float32, interpret: bool = False):
     N = q.shape[0]
     rows = N // TILE

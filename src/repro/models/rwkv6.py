@@ -119,6 +119,30 @@ def wkv_chunked(r, k, v, w, u, state):
     return y.astype(r.dtype), state
 
 
+def wkv(r, k, v, w, u, state):
+    """Backend-dispatched WKV6 over a segment (handles chunk padding).
+
+    The chunked formulation exists to feed the MXU with [C, hs] tiles — a
+    TPU win. On CPU hosts it is ~2.6x *slower* than the plain token scan
+    (BENCH_kernels ``wkv_speedup`` 0.388 with ``q8_timed_path == "ref"``):
+    the [C, C] intra-chunk matmuls plus the cumsum/exp bookkeeping cost more
+    than the recurrence they replace when there is no MXU to amortize them.
+    So non-TPU backends run the naive scan (``kernels/ref.wkv6_naive``, the
+    kernel's oracle — same recurrence, no chunking overhead)."""
+    if jax.default_backend() != "tpu":
+        from repro.kernels.ref import wkv6_naive
+        return wkv6_naive(r, k, v, w, u, state)
+    T = r.shape[1]
+    pad = (-T) % CHUNK
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+    y, state = wkv_chunked(r, k, v, w, u, state)
+    return y[:, :T], state
+
+
 def wkv_step(r, k, v, w, u, state):
     """Single-token recurrence. r,k,v,w: [B, H, hs]; state [B, H, hs, hs]."""
     rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
@@ -173,14 +197,7 @@ def time_mix(p, x, cfg: ModelConfig, x_prev, state):
                             p["bonus_u"], state)
         y = y[:, None]
     else:
-        pad = (-S) % CHUNK
-        if pad:
-            z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
-            rh, kh, vh = z(rh), z(kh), z(vh)
-            wh = jnp.pad(wh, ((0, 0), (0, pad), (0, 0), (0, 0)),
-                         constant_values=1.0)
-        y, state = wkv_chunked(rh, kh, vh, wh, p["bonus_u"], state)
-        y = y[:, :S]
+        y, state = wkv(rh, kh, vh, wh, p["bonus_u"], state)
     y = y.reshape(B, S, D)
     # group-norm over heads
     yf = y.astype(jnp.float32).reshape(B, S, H, hs)

@@ -7,12 +7,27 @@ hot CIDs have a close replica before scorers/aggregators come asking — and so
 a churned-out origin doesn't take its round's model down with it (the
 failover path in ``StoreNode.get_bytes`` reroutes to these replicas).
 
+Delta awareness: a delta envelope is useless without its base chain. Before
+replicating a delta the replicator walks the *full* ancestor chain from the
+origin's local blocks and pushes every link the peer is missing, oldest
+first, so the replica is decodable the moment it lands (normally the chain
+is a no-op skip — the bases were previous rounds' announces). If the origin
+itself cannot resolve the chain (a base was gc'd), the delta is not pushed
+at all: an undecodable replica would only waste WAN bytes
+(``stats['chain_unresolved']``).
+
 Pushes ride ``NetFabric.transfer_async``: they occupy links, take simulated
 time to land, and are cancelled by churn like any in-flight transfer.
 """
 from __future__ import annotations
 
+from typing import List, Optional
+
+from repro.core import wire
+from repro.core.store import deserialize_pytree
 from repro.net.fabric import NetFabric, UnreachableError
+
+MAX_CHAIN = 64  # defensive bound on base-chain walks
 
 
 class GossipReplicator:
@@ -20,7 +35,42 @@ class GossipReplicator:
         self.fabric = fabric
         self.network = network          # StoreNetwork (duck-typed: .nodes)
         self.factor = int(factor)
-        self.stats = {"pushes": 0, "landed": 0, "skipped": 0, "failed": 0}
+        self.stats = {"pushes": 0, "landed": 0, "skipped": 0, "failed": 0,
+                      "base_pushes": 0, "chain_unresolved": 0}
+        # cid -> base_cid memo: content addressing makes payloads immutable,
+        # so each link's base is parsed from its (model-sized) payload at
+        # most once per replicator, not on every announce of the chain
+        self._base_of: dict = {}
+
+    def _base_cid(self, src_node, cid: str) -> Optional[str]:
+        """``base_cid`` of a locally-held payload ('' = chain root); None
+        when the origin doesn't hold the payload at all."""
+        hit = self._base_of.get(cid)
+        if hit is not None:
+            return hit
+        data = src_node.read_local(cid)
+        if data is None:
+            return None
+        base = wire.base_cid_of_store(deserialize_pytree(data))
+        self._base_of[cid] = base
+        return base
+
+    def _base_chain(self, src_node, base_cid: str) -> Optional[List[str]]:
+        """Every ancestor CID the delta depends on, oldest first, read from
+        the origin's local blocks; None when the origin cannot resolve the
+        chain itself (missing/gc'd base, or a cycle)."""
+        chain, cur, seen = [], base_cid, set()
+        while cur:
+            if cur in seen or len(chain) >= MAX_CHAIN:
+                return None
+            seen.add(cur)
+            nxt = self._base_cid(src_node, cur)
+            if nxt is None:
+                return None
+            chain.append(cur)
+            cur = nxt
+        chain.reverse()
+        return chain
 
     def on_announce(self, cid: str, owner: str, nbytes: int,
                     base_cid: str = "") -> None:
@@ -29,17 +79,24 @@ class GossipReplicator:
         src_node = self.network.nodes.get(owner)
         if src_node is None:
             return
+        chain = self._base_chain(src_node, base_cid) if base_cid else []
         for peer_id in self.fabric.nearest(owner, self.factor):
             peer = self.network.nodes.get(peer_id)
             if peer is None:
                 self.stats["skipped"] += 1
                 continue
-            # a delta envelope is useless without its base: push the base
-            # first if the peer lacks it (normally a skip — the base was
-            # last round's announce), then the delta. The fabric is only
-            # ever charged the bytes each envelope actually carries.
-            for c in ((base_cid, cid) if base_cid else (cid,)):
-                self._push(src_node, peer, peer_id, c)
+            if chain is None:
+                # the origin can't resolve the delta's own base chain — a
+                # replica would be undecodable, so push nothing to this peer
+                self.stats["chain_unresolved"] += 1
+                continue
+            # bring the peer's base chain current (oldest first) before the
+            # delta; an already-current peer skips straight to the delta
+            for c in chain:
+                if not peer.has(c):
+                    self._push(src_node, peer, peer_id, c)
+                    self.stats["base_pushes"] += 1
+            self._push(src_node, peer, peer_id, cid)
 
     def _push(self, src_node, peer, peer_id: str, cid: str) -> None:
         if peer.has(cid):

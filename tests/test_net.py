@@ -164,6 +164,59 @@ def test_gossip_replicates_announced_cid_to_nearest_peer():
     assert set(fab.providers(cid)) == {"a", replicas[0]}
 
 
+def test_gossip_pushes_missing_base_chain_before_delta():
+    """Delta-aware gossip: replicating a delta envelope also moves every
+    missing link of its base chain, oldest first, so the replica can decode
+    the moment it lands."""
+    from repro.core import wire
+    env, fab, net = _swarm(nodes=("a", "b", "c"))
+    gossip = GossipReplicator(fab, net, factor=1)
+    fab.subscribe(gossip.on_announce)
+    a = net.nodes["a"]
+    rng = np.random.default_rng(0)
+    v0, v1, v2 = (rng.normal(0, 0.1, 4000).astype(np.float32)
+                  for _ in range(3))
+    cid0 = a.put(wire.encode_vec(v0, "int8").to_store())
+    b0 = a.get_decoded(cid0, a.wire_decoder()).vec()
+    cid1 = a.put(wire.encode_vec(v0 + v1, "int8-delta", base_vec=b0,
+                                 base_cid=cid0).to_store())
+    b1 = a.get_decoded(cid1, a.wire_decoder()).vec()
+    cid2 = a.put(wire.encode_vec(v0 + v1 + v2, "int8-delta", base_vec=b1,
+                                 base_cid=cid1).to_store())
+    # only the newest delta is announced; its two-link chain must ride along
+    fab.announce(cid2, "a", base_cid=cid1)
+    env.run()
+    replica = next(net.nodes[nid] for nid in ("b", "c")
+                   if net.nodes[nid].has(cid2))
+    assert replica.has(cid1) and replica.has(cid0)
+    assert gossip.stats["base_pushes"] == 2
+    # the replica decodes the delta entirely from its own blocks
+    dm = replica.get_decoded(cid2, replica.wire_decoder())
+    want = a.get_decoded(cid2, a.wire_decoder()).vec()
+    np.testing.assert_allclose(np.asarray(dm.vec()), np.asarray(want),
+                               rtol=0, atol=0)
+
+
+def test_gossip_skips_delta_with_unresolvable_base_chain():
+    """A delta whose base chain the origin itself cannot resolve is not
+    replicated at all — an undecodable replica would only waste WAN bytes."""
+    from repro.core import wire
+    env, fab, net = _swarm(nodes=("a", "b", "c"))
+    gossip = GossipReplicator(fab, net, factor=1)
+    fab.subscribe(gossip.on_announce)
+    a = net.nodes["a"]
+    rng = np.random.default_rng(1)
+    v = rng.normal(0, 0.1, 4000).astype(np.float32)
+    missing = "bafy" + "0" * 64
+    cid = a.put(wire.encode_vec(v, "int8-delta", base_vec=np.zeros_like(v),
+                                base_cid=missing).to_store())
+    fab.announce(cid, "a", base_cid=missing)
+    env.run()
+    assert gossip.stats["chain_unresolved"] == 1
+    assert gossip.stats["pushes"] == 0
+    assert not net.nodes["b"].has(cid) and not net.nodes["c"].has(cid)
+
+
 def test_prefetch_warms_decoded_cache_after_transfer_time():
     env, fab, net = _swarm(preset="wan-uniform", nodes=("a", "b", "c"))
     decoder = lambda flat: {k: np.asarray(v) for k, v in flat.items()}

@@ -1,0 +1,48 @@
+"""benchmarks/scorebench.py --quick inside the tier-1 budget: the
+BENCH_scoring artifact keeps its schema and the acceptance invariants stay
+machine-checked (batched >= 3x sequential at K >= 4, exactly one
+device->host transfer per (scorer, round) score call, parity <= 1e-5)."""
+import json
+
+import pytest
+
+scorebench = pytest.importorskip("benchmarks.scorebench",
+                                 reason="benchmarks/ needs repo-root cwd")
+
+
+@pytest.fixture(scope="module")
+def bench(tmp_path_factory):
+    out_path = tmp_path_factory.mktemp("bench") / "BENCH_scoring.json"
+    result = scorebench.main(quick=True, out_path=str(out_path))
+    return result, json.loads(out_path.read_text())
+
+
+def test_bench_scoring_schema(bench):
+    result, written = bench
+    assert written == json.loads(json.dumps(result))  # artifact == return
+    assert written["quick"] is True
+    assert set(written) == {"quick", "config", "sequential_wall_s",
+                            "batched_wall_s", "speedup", "host_syncs",
+                            "parity_max_abs_diff"}
+    cfg = written["config"]
+    assert cfg["k"] >= 4  # the acceptance bar is defined for K >= 4
+    assert cfg["n_test"] > 0 and cfg["batch_size"] > 0
+    # a mixed round: both q8 and raw envelopes were ingested
+    assert set(cfg["wire_methods"]) == {"int8", "raw"}
+    assert all(v > 0 for v in cfg["wire_methods"].values())
+    assert written["sequential_wall_s"] > 0
+    assert written["batched_wall_s"] > 0
+
+
+def test_bench_scoring_acceptance(bench):
+    _, written = bench
+    # batched scoring >= 3x faster than the per-(model, batch) loop
+    assert written["speedup"] >= 3.0
+    # exactly ONE device->host transfer per (scorer, round) score call,
+    # vs 2 float() syncs per (model, batch) on the sequential path
+    assert written["host_syncs"]["batched_per_round"] == 1
+    assert written["host_syncs"]["sequential_per_round"] == \
+        2 * written["config"]["k"] * (
+            -(-written["config"]["n_test"] // written["config"]["batch_size"]))
+    # score parity with the sequential path
+    assert written["parity_max_abs_diff"] <= 1e-5
