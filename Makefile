@@ -3,7 +3,7 @@
 PYTHON ?= python
 PYTEST_ARGS ?=
 
-.PHONY: verify netbench kernelbench scorebench
+.PHONY: verify netbench kernelbench scorebench chainbench
 
 verify:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q $(PYTEST_ARGS)
@@ -16,3 +16,6 @@ kernelbench:
 
 scorebench:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.scorebench --quick
+
+chainbench:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.chainbench --quick

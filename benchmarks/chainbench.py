@@ -1,0 +1,201 @@
+"""Replicated-chain benchmark: what does decentralized orchestration cost?
+
+Runs the paper CNN federation with the orchestration chain genuinely
+replicated (one ``repro.chain`` replica per silo + one for the engine,
+blocks gossiped as charged WAN transfers) and reports, per scenario:
+
+  * ``sync``/``async`` x ``lan``/``wan-heterogeneous`` — blocks sealed,
+    forks observed, max reorg depth, chain bytes on the wire, and
+    **tx-finality latency** (submit -> executed on every replica): the cost
+    the paper's §2.3 trust story pays for removing the central orchestrator;
+  * a **sealer partition** (wan-heterogeneous): both sides keep sealing
+    through the cut — the fork is observed — and after the heal every
+    replica converges to one head with byte-identical contract state;
+  * an **equivocating byzantine sealer**: two blocks per height to different
+    halves of the swarm; honest replicas detect the equivocation and fork
+    choice still converges.
+
+Silos get fixed simulated train windows and ``time_scale=0``, so every
+number is a pure function of the modeled windows + link profiles —
+bit-reproducible across hosts. Results land in ``BENCH_chain.json``
+(schema + acceptance asserted by ``tests/test_chainbench_schema.py``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, Optional, Tuple
+
+from benchmarks.common import CNN, emit, timed
+from repro.config import FaultScenario, FedConfig, NetConfig
+from repro.core.builder import SiloSpec, build_image_experiment
+
+TRAIN_WINDOW_S = 1.0    # base simulated local-training window per silo
+STAGGER_S = 0.05        # per-silo window increment (heterogeneous fleets)
+TIME_SCALE = 0.0        # sim clock independent of host compute => exact repro
+
+
+def _fed(mode: str, net: NetConfig, *, silos: int, rounds: int,
+         round_deadline_s: float = 0.0,
+         scorer_deadline_s: float = 0.0) -> FedConfig:
+    return FedConfig(n_silos=silos, clients_per_silo=1, rounds=rounds,
+                     local_epochs=1, mode=mode, scorer="accuracy",
+                     agg_policy="all", score_policy="median",
+                     round_deadline_s=round_deadline_s,
+                     scorer_deadline_s=scorer_deadline_s, net=net)
+
+
+def _run(fed: FedConfig, *, n_train: int, n_test: int, seed: int = 0):
+    specs = [SiloSpec(extra_train_delay=TRAIN_WINDOW_S + STAGGER_S * i)
+             for i in range(fed.n_silos)]
+    orch = build_image_experiment(CNN, fed, n_train=n_train, n_test=n_test,
+                                  silo_specs=specs, seed=seed)
+    for s in orch.silos:
+        s.time_scale = TIME_SCALE
+    orch.run(fed.rounds)
+    orch.env.run()          # drain in-flight gossip so convergence is final
+    return orch
+
+
+def _percentile(xs, q: float) -> float:
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    i = min(len(xs) - 1, int(q * (len(xs) - 1) + 0.5))
+    return xs[i]
+
+
+def _chain_row(orch) -> Dict:
+    chain = orch.chain
+    fin = chain.finality()
+    return {
+        "blocks_sealed": chain.totals("blocks_sealed"),
+        "forks_observed": chain.totals("forks_observed"),
+        "reorgs": chain.totals("reorgs"),
+        "max_reorg_depth": max(r.stats["max_reorg_depth"]
+                               for r in chain.replicas.values()),
+        "reverts": chain.totals("reverts"),
+        "equivocations_seen": chain.totals("equivocations_seen"),
+        "chain_bytes": orch.fabric.stats["chain_bytes"],
+        "undeliverable": chain.stats["undeliverable"],
+        "catchup_blocks": chain.stats["catchup_blocks"],
+        "heads_converged": chain.converged(),
+        "state_digests_equal":
+            len(set(chain.state_digests().values())) == 1,
+        "verified": all(r.verify() for r in chain.replicas.values()),
+        "tx_finality_s": {"n": len(fin),
+                          "mean": sum(fin) / len(fin) if fin else 0.0,
+                          "p95": _percentile(fin, 0.95),
+                          "max": max(fin) if fin else 0.0},
+        "wall_clock_s": orch.env.now,
+    }
+
+
+def run_grid(quick: bool) -> Dict[str, Dict]:
+    """sync/async x lan/wan-heterogeneous through the replicated chain."""
+    silos = 4
+    rounds = 2 if quick else 4
+    n_train = 300 if quick else 1200
+    n_test = 120 if quick else 400
+    out: Dict[str, Dict] = {}
+    for mode in ("sync", "async"):
+        for preset in ("lan", "wan-heterogeneous"):
+            net = NetConfig(preset=preset, replication_factor=1,
+                            prefetch=True)
+            fed = _fed(mode, net, silos=silos, rounds=rounds)
+            orch = _run(fed, n_train=n_train, n_test=n_test)
+            name = f"{mode}_{preset}"
+            out[name] = _chain_row(orch)
+            emit(f"chain_{name}_finality_ms",
+                 f"{out[name]['tx_finality_s']['mean'] * 1e3:.1f}",
+                 f"blocks={out[name]['blocks_sealed']} "
+                 f"forks={out[name]['forks_observed']}")
+    return out
+
+
+def run_partition(quick: bool) -> Dict:
+    """Sealer partition on wan-heterogeneous: fork both sides, heal,
+    converge — the acceptance scenario."""
+    silos, rounds = 4, 3
+    scenarios = (
+        FaultScenario(action="partition", node="silo2,silo3",
+                      round=2, when="train"),
+        FaultScenario(action="heal", round=3, when="train"),
+    )
+    net = NetConfig(preset="wan-heterogeneous", replication_factor=1,
+                    prefetch=True, scenarios=scenarios)
+    fed = _fed("sync", net, silos=silos, rounds=rounds,
+               round_deadline_s=3.0, scorer_deadline_s=2.0)
+    orch = _run(fed, n_train=300 if quick else 900,
+                n_test=120 if quick else 300, seed=1)
+    row = _chain_row(orch)
+    row["rounds_completed"] = all(s.rounds_done == rounds
+                                  for s in orch.silos)
+    emit("chain_partition_forks", row["forks_observed"],
+         f"max_reorg_depth={row['max_reorg_depth']} "
+         f"converged={row['heads_converged']} "
+         f"digests_equal={row['state_digests_equal']}")
+    return row
+
+
+def run_byzantine(quick: bool) -> Dict:
+    """An equivocating sealer: two blocks per height to different halves of
+    the swarm; detection + convergence."""
+    silos, rounds = 4, 2
+    scenarios = (FaultScenario(action="byzantine_sealer", node="silo1",
+                               round=1, when="train"),)
+    net = NetConfig(preset="wan-heterogeneous", replication_factor=1,
+                    prefetch=True, scenarios=scenarios)
+    fed = _fed("sync", net, silos=silos, rounds=rounds,
+               scorer_deadline_s=2.0)
+    orch = _run(fed, n_train=300 if quick else 900,
+                n_test=120 if quick else 300, seed=2)
+    row = _chain_row(orch)
+    row["equivocations_sent"] = orch.chain.stats["equivocations_sent"]
+    emit("chain_byzantine_equivocations", row["equivocations_sent"],
+         f"seen={row['equivocations_seen']} "
+         f"converged={row['heads_converged']}")
+    return row
+
+
+def main(quick: bool = True, out_path: str = "BENCH_chain.json") -> Dict:
+    with timed("chainbench"):
+        grid = run_grid(quick)
+        partition = run_partition(quick)
+        byzantine = run_byzantine(quick)
+    out = {
+        "quick": quick,
+        "config": {"train_window_s": TRAIN_WINDOW_S,
+                   "time_scale": TIME_SCALE, "model": CNN.arch_id},
+        "scenarios": grid,
+        "partition": partition,
+        "byzantine": byzantine,
+    }
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    ok = (all(r["heads_converged"] and r["state_digests_equal"]
+              and r["verified"] and r["blocks_sealed"] > 0
+              and r["tx_finality_s"]["n"] > 0
+              for r in grid.values())
+          and grid["sync_wan-heterogeneous"]["tx_finality_s"]["mean"]
+          > grid["sync_lan"]["tx_finality_s"]["mean"]
+          and partition["forks_observed"] >= 1
+          and partition["heads_converged"]
+          and partition["state_digests_equal"]
+          and partition["rounds_completed"]
+          and byzantine["equivocations_sent"] >= 1
+          and byzantine["equivocations_seen"] >= 1
+          and byzantine["heads_converged"])
+    emit("chain_acceptance", "PASS" if ok else "FAIL",
+         "replicas converge with identical state in every scenario; WAN "
+         "finality > LAN; partition forks + heals; equivocation detected")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="tier-1 sized run (small data, few rounds)")
+    ap.add_argument("--out", default="BENCH_chain.json")
+    args = ap.parse_args()
+    main(quick=args.quick, out_path=args.out)

@@ -143,8 +143,11 @@ def run_delta(quick: bool) -> Dict:
                     n_test=160 if quick else 400, silo_specs=specs())
         prev, rows = 0, []
         for mark in orch.round_log:
-            rows.append(mark["wan_bytes"] - prev)
-            prev = mark["wan_bytes"]
+            # store bytes only: consensus gossip (chain_bytes) rides the same
+            # fabric but is not what the wire-format lever acts on
+            store_b = mark["wan_bytes"] - mark.get("chain_bytes", 0)
+            rows.append(store_b - prev)
+            prev = store_b
         per_round[comp] = rows
     ratios = [d / i for d, i in zip(per_round["int8-delta"][1:],
                                     per_round["int8"][1:]) if i > 0]

@@ -1,0 +1,295 @@
+"""Per-silo chain replica: block tree + mempool + canonical-head maintenance.
+
+One ``ChainReplica`` is one participant's view of the PoA chain. It holds the
+full block *tree* (not just the canonical chain): competing blocks arrive
+whenever sealers act concurrently or a partition splits the sealer set, and
+fork choice (``forkchoice.py``) decides the canonical head. Contract state is
+maintained by an attached executor (``adapter.ContractExecutor``):
+
+  * canonical-head *extensions* execute incrementally (the fast path);
+  * a *reorg* rebuilds contract state by re-executing the new canonical chain
+    from genesis — deterministic, so every replica that converges on a head
+    converges on byte-identical contract state;
+  * transactions this replica submitted that fall off the canonical chain in
+    a reorg return to the mempool (original submission order) and are
+    re-sealed on the new head, so no locally-submitted tx is ever lost.
+
+Sealing follows the Clique schedule in ``sealer.py`` with period=0: a
+submitted tx seals immediately on the local replica (out-of-turn if needed),
+giving submit-via-local-replica / read-your-replica semantics. During a
+partition both sides keep sealing — that is the fork; healing is pure block
+dissemination (``sync.py``).
+
+``solo=True`` is single-replica mode (the ``core.ledger.Ledger`` facade): one
+process impersonates the whole committee, sealing every height as the
+in-turn sealer. That reproduces the pre-chain Ledger behaviour bit-for-bit.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+from repro.chain import forkchoice, sealer as sealing
+from repro.chain.forkchoice import GENESIS
+
+
+@dataclass
+class Tx:
+    sender: str
+    method: str
+    args: Dict[str, Any]
+    nonce: int = 0
+    # globally-unique id assigned by the submitting replica ("<origin>:<seq>");
+    # identity for dedupe, emit-once guards and reorg resurrection
+    txid: str = ""
+
+    def to_json(self) -> Dict:
+        out = {"sender": self.sender, "method": self.method,
+               "args": self.args, "nonce": self.nonce}
+        if self.txid:
+            out["txid"] = self.txid
+        return out
+
+
+@dataclass
+class Block:
+    height: int
+    prev_hash: str
+    sealer: str
+    txs: List[Tx]
+    logical_time: float
+    difficulty: int = sealing.DIFF_IN_TURN
+    salt: int = 0            # equivocation variants differ only by salt
+    hash: str = ""
+
+    def to_json(self) -> Dict:
+        return {"height": self.height, "prev": self.prev_hash,
+                "sealer": self.sealer, "time": self.logical_time,
+                "difficulty": self.difficulty, "salt": self.salt,
+                "hash": self.hash, "txs": [t.to_json() for t in self.txs]}
+
+    def compute_hash(self) -> str:
+        body = json.dumps({
+            "height": self.height, "prev": self.prev_hash,
+            "sealer": self.sealer, "time": self.logical_time,
+            "difficulty": self.difficulty, "salt": self.salt,
+            "txs": [t.to_json() for t in self.txs]}, sort_keys=True)
+        return hashlib.sha256(body.encode()).hexdigest()
+
+    def nbytes(self) -> int:
+        """Wire size of this block (charged on fabric links by sync.py)."""
+        return len(json.dumps(self.to_json()))
+
+
+class ChainReplica:
+    def __init__(self, node_id: str, sealers: List[str], *,
+                 executor=None, solo: bool = False,
+                 byzantine: Optional[str] = None):
+        if not sealers:
+            raise ValueError("need at least one PoA sealer")
+        self.node_id = node_id
+        self.sealers = list(sealers)
+        self.executor = executor
+        self.solo = solo
+        self.byzantine = byzantine
+        self.blocks: Dict[str, Block] = {}
+        self.head = GENESIS
+        self._td: Dict[str, int] = {GENESIS: 0}
+        self._height: Dict[str, int] = {GENESIS: -1}
+        self.mempool: "OrderedDict[str, Tx]" = OrderedDict()
+        self._my_txs: "OrderedDict[str, Tx]" = OrderedDict()
+        self._onchain: Set[str] = set()          # txids on the canonical chain
+        self._orphans: Dict[str, List[Block]] = {}   # parent hash -> blocks
+        self._sealed_at: Dict[Tuple[str, int], str] = {}
+        self._at_height: Dict[int, int] = {}     # blocks held per height
+        self._seq = 0
+        self.stats = {"txs": 0, "blocks": 0, "bytes": 0, "blocks_sealed": 0,
+                      "blocks_imported": 0, "forks_observed": 0, "reorgs": 0,
+                      "max_reorg_depth": 0, "equivocations_seen": 0,
+                      "orphans": 0, "invalid": 0, "reverts": 0}
+
+    # -- chain reads --------------------------------------------------------- #
+    @property
+    def height(self) -> int:
+        """Number of blocks on the canonical chain (Ledger-API compatible)."""
+        return self._height[self.head] + 1
+
+    @property
+    def head_hash(self) -> str:
+        return self.head
+
+    def canonical(self) -> List[Block]:
+        out, cur = [], self.head
+        while cur != GENESIS:
+            blk = self.blocks[cur]
+            out.append(blk)
+            cur = blk.prev_hash
+        out.reverse()
+        return out
+
+    def block_randomness(self, height: int = -1) -> int:
+        """Deterministic 'on-chain' randomness from a canonical block hash."""
+        return int(self.canonical()[height].hash[:16], 16)
+
+    def verify(self) -> bool:
+        """Audit the canonical chain: linkage, hashes, seal validity."""
+        prev, ph = GENESIS, -1
+        for blk in self.canonical():
+            if blk.prev_hash != prev or blk.hash != blk.compute_hash():
+                return False
+            if blk.height != ph + 1:
+                return False
+            if not sealing.validate_seal(self.sealers, blk):
+                return False
+            prev, ph = blk.hash, blk.height
+        return True
+
+    # -- sealing -------------------------------------------------------------- #
+    @property
+    def can_seal(self) -> bool:
+        return self.solo or self.node_id in self.sealers
+
+    def submit(self, sender: str, method: str, args: Dict[str, Any],
+               logical_time: float = 0.0
+               ) -> Tuple[Tx, Optional[Block], str, Any]:
+        """Mempool + immediate local seal (Clique period=0). Returns
+        ``(tx, sealed_block, status, result)`` where status is ``"ok"`` /
+        ``"revert"`` (result is the handler return / the revert exception) or
+        ``"queued"`` when this replica cannot seal."""
+        self._seq += 1
+        tx = Tx(sender, method, dict(args), self._seq,
+                f"{self.node_id}:{self._seq}")
+        self.mempool[tx.txid] = tx
+        self._my_txs[tx.txid] = tx
+        self.stats["txs"] += 1
+        blk = self.seal(logical_time)
+        if blk is None:
+            return tx, None, "queued", None
+        status, result = ("ok", None)
+        if self.executor is not None:
+            status, result = self.executor.last_results.get(
+                tx.txid, ("ok", None))
+        return tx, blk, status, result
+
+    def seal(self, logical_time: float = 0.0) -> Optional[Block]:
+        """Seal every mempool tx into one block on the current head."""
+        if not self.mempool or not self.can_seal:
+            return None
+        h = self._height[self.head] + 1
+        who = sealing.in_turn_sealer(self.sealers, h) if self.solo \
+            else self.node_id
+        blk = Block(h, self.head, who, list(self.mempool.values()),
+                    logical_time, sealing.difficulty(self.sealers, h, who))
+        blk.hash = blk.compute_hash()
+        self.mempool = OrderedDict()
+        self._insert(blk)
+        self._switch_head(blk.hash)        # own extension always wins
+        self.stats["blocks_sealed"] += 1
+        return blk
+
+    # -- import --------------------------------------------------------------- #
+    def import_block(self, blk: Block) -> str:
+        """Add a gossiped block to the tree and update the canonical head.
+        Returns ``known | invalid | orphan | extended | reorged | side``."""
+        if blk.hash in self.blocks:
+            return "known"
+        if blk.hash != blk.compute_hash() or \
+                not sealing.validate_seal(self.sealers, blk):
+            self.stats["invalid"] += 1
+            return "invalid"
+        if blk.prev_hash != GENESIS and blk.prev_hash not in self.blocks:
+            pend = self._orphans.setdefault(blk.prev_hash, [])
+            if all(b.hash != blk.hash for b in pend):
+                pend.append(blk)
+                self.stats["orphans"] += 1
+            return "orphan"
+        inserted = self._connect(blk)
+        self.stats["blocks_imported"] += len(inserted)
+        best = self.head
+        for h in inserted:
+            if forkchoice.better(self, h, best):
+                best = h
+        if best == self.head:
+            return "side"       # the incoming branch lost fork choice
+        return self._switch_head(best)
+
+    def _insert(self, blk: Block) -> None:
+        self.blocks[blk.hash] = blk
+        self._td[blk.hash] = self._td[blk.prev_hash] + blk.difficulty
+        self._height[blk.hash] = blk.height
+        self.stats["blocks"] += 1
+        # a second block at an occupied height is an observed fork (the
+        # status codes don't measure this: catch-up ancestor imports are
+        # "side" without being new forks)
+        seen = self._at_height.get(blk.height, 0)
+        self._at_height[blk.height] = seen + 1
+        if seen:
+            self.stats["forks_observed"] += 1
+        key = (blk.sealer, blk.height)
+        other = self._sealed_at.get(key)
+        if other is None:
+            self._sealed_at[key] = blk.hash
+        elif other != blk.hash:
+            self.stats["equivocations_seen"] += 1
+
+    def _connect(self, blk: Block) -> List[str]:
+        """Insert ``blk`` plus any orphans waiting on it (BFS down the tree);
+        returns the inserted hashes."""
+        out: List[str] = []
+        stack = [blk]
+        while stack:
+            b = stack.pop(0)
+            parent_h = self._height.get(b.prev_hash)
+            if parent_h is None or b.height != parent_h + 1:
+                self.stats["invalid"] += 1
+                continue
+            self._insert(b)
+            out.append(b.hash)
+            for w in self._orphans.pop(b.hash, ()):
+                if w.hash not in self.blocks:
+                    stack.append(w)
+        return out
+
+    # -- head switching -------------------------------------------------------- #
+    def _switch_head(self, new: str) -> str:
+        old = self.head
+        if new == old:
+            return "known"
+        anc = forkchoice.common_ancestor(self, old, new)
+        self.head = new
+        if anc == old:                         # pure extension: fast path
+            path, cur = [], new
+            while cur != anc:
+                blk = self.blocks[cur]
+                path.append(blk)
+                cur = blk.prev_hash
+            for blk in reversed(path):
+                self._exec(blk)
+                for t in blk.txs:
+                    if t.txid:
+                        self._onchain.add(t.txid)
+                        # a resurrected tx that lands via an imported
+                        # extension must leave the mempool, or the next
+                        # seal would put it on-chain twice
+                        self.mempool.pop(t.txid, None)
+            return "extended"
+        depth = self._height[old] - self._height[anc]
+        self.stats["reorgs"] += 1
+        self.stats["max_reorg_depth"] = max(self.stats["max_reorg_depth"],
+                                            depth)
+        chain = self.canonical()
+        self._onchain = {t.txid for b in chain for t in b.txs if t.txid}
+        if self.executor is not None:
+            self.stats["reverts"] += self.executor.rebuild(chain)
+        # resurrect locally-submitted txs the reorg dropped, original order
+        self.mempool = OrderedDict(
+            (txid, tx) for txid, tx in self._my_txs.items()
+            if txid not in self._onchain)
+        return "reorged"
+
+    def _exec(self, blk: Block) -> None:
+        if self.executor is not None:
+            self.stats["reverts"] += self.executor.execute_block(blk)

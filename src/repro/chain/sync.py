@@ -1,0 +1,244 @@
+"""Block gossip + catch-up over the WAN fabric: the chain's network plane.
+
+``ChainNetwork`` owns one ``ChainReplica`` per participant and moves blocks
+between them as *charged, cancellable fabric transfers* (traffic class
+``"chain"``, foreground QoS — consensus messages are latency-critical and
+small). Orchestration therefore experiences the network for real:
+
+  * a sealed block broadcasts to every peer; peers behind a partition are
+    simply unreachable (``stats["undeliverable"]``) — that is how forks are
+    *born*, no extra machinery;
+  * a block whose parent is unknown parks in the orphan pool and triggers a
+    catch-up: a tiny request to the sender, answered with the missing
+    ancestor batch in one charged transfer (late joiners / post-heal sync);
+  * a replica that keeps its own head on import (the incoming branch lost
+    fork choice) announces its head back to the sender — the minority side
+    of a heal learns about the heavier chain without polling;
+  * after any import, resurrected mempool txs re-seal on the new head and
+    re-broadcast, so a reorged-away submission propagates to the winning
+    chain automatically.
+
+``resync()`` makes every replica announce its head to every peer — wired to
+the fault injector's ``heal``/``up`` actions, it is the "TCP reconnect" that
+turns a healed partition into catch-up traffic and, eventually, one head.
+
+With ``fabric=None`` delivery is synchronous and free (unit tests /
+single-process replication).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+from repro.chain.adapter import ContractExecutor, LedgerView
+from repro.chain.replica import GENESIS, Block, ChainReplica
+from repro.chain import sealer as sealing
+
+REQUEST_NBYTES = 96          # a catch-up request is one tiny control message
+MAX_CATCHUP = 512            # ancestor batch bound per catch-up response
+
+
+class ChainNetwork:
+    def __init__(self, env, fabric=None, *, sealers: List[str]):
+        self.env = env
+        self.fabric = fabric
+        self.sealers = list(sealers)
+        self.replicas: Dict[str, ChainReplica] = {}
+        self.views: Dict[str, LedgerView] = {}
+        self._announced: Set[Tuple[str, str, str]] = set()
+        # finality probes: txid -> submit time / txid -> {node: first-exec time}
+        self.tx_submit_t: Dict[str, float] = {}
+        self.tx_exec_t: Dict[str, Dict[str, float]] = {}
+        self.stats = {"broadcasts": 0, "delivered": 0, "undeliverable": 0,
+                      "catchup_requests": 0, "catchup_blocks": 0,
+                      "head_announces": 0, "equivocations_sent": 0}
+
+    # -- membership ---------------------------------------------------------- #
+    def add_replica(self, node_id: str, contract, *,
+                    byzantine: Optional[str] = None) -> LedgerView:
+        ex = ContractExecutor(contract)
+        ex.on_exec = lambda txid, nid=node_id: \
+            self.tx_exec_t.setdefault(txid, {}).__setitem__(nid, self._now())
+        rep = ChainReplica(node_id, self.sealers, executor=ex,
+                           byzantine=byzantine)
+        self.replicas[node_id] = rep
+        if self.fabric is not None:
+            self.fabric.register_node(node_id)
+        view = LedgerView(self, rep)
+        self.views[node_id] = view
+        return view
+
+    def _now(self) -> float:
+        return self.env.now if self.env is not None else 0.0
+
+    # -- submission ---------------------------------------------------------- #
+    def submit(self, replica: ChainReplica, sender: str, method: str,
+               args: Dict, logical_time: float) -> Any:
+        tx, blk, status, result = replica.submit(sender, method, args,
+                                                 logical_time)
+        self.tx_submit_t[tx.txid] = self._now()
+        if blk is not None:
+            self.broadcast(replica.node_id, blk)
+        if status == "revert":
+            raise result
+        return result
+
+    # -- block plane --------------------------------------------------------- #
+    def broadcast(self, src: str, blk: Block) -> None:
+        rep = self.replicas[src]
+        twin = None
+        if rep.byzantine == "equivocate":
+            twin = sealing.equivocating_twin(blk)
+            rep.import_block(twin)      # the equivocator knows both variants
+            self.stats["equivocations_sent"] += 1
+        peers = sorted(p for p in self.replicas if p != src)
+        for i, peer in enumerate(peers):
+            send = twin if (twin is not None and i % 2 == 1) else blk
+            self._send_block(src, peer, send)
+        self.stats["broadcasts"] += 1
+
+    def _transfer(self, src: str, dst: str, label: str, nbytes: int,
+                  on_land, key) -> None:
+        """One chain-plane move: synchronous and free without a fabric,
+        otherwise a charged, cancellable ``"chain"``-class transfer.
+        Unreachable peers count as ``undeliverable`` — the seed of a fork.
+        ``src`` is part of every key: during resync several replicas can
+        send the same block to one dst concurrently, and the transfers must
+        stay independently cancellable on churn."""
+        if self.fabric is None:
+            on_land()
+            return
+        from repro.net.fabric import UnreachableError
+        try:
+            self.fabric.transfer_async(src, dst, label, nbytes, on_land,
+                                       kind="chain", key=key)
+        except UnreachableError:
+            self.stats["undeliverable"] += 1
+
+    def _send_block(self, src: str, dst: str, blk: Block) -> None:
+        self._transfer(src, dst, f"blk:{blk.hash[:12]}", blk.nbytes(),
+                       lambda: self._deliver(dst, src, blk),
+                       ("chain", src, dst, blk.hash))
+
+    def _deliver(self, dst: str, src: str, blk: Block) -> None:
+        rep = self.replicas.get(dst)
+        if rep is None:
+            return
+        self.stats["delivered"] += 1
+        status = rep.import_block(blk)
+        if status == "orphan":
+            self._request_catchup(dst, src, blk)
+        elif status == "side":
+            # incoming branch lost: tell the sender about our heavier head
+            self._announce_head(dst, src)
+        self._post_import(dst)
+
+    def _post_import(self, dst: str) -> None:
+        """Resurrected txs (reorg) re-seal on the new head and propagate."""
+        rep = self.replicas[dst]
+        if rep.mempool and rep.can_seal:
+            blk = rep.seal(self._now())
+            if blk is not None:
+                self.broadcast(dst, blk)
+
+    def _announce_head(self, dst: str, src: str) -> None:
+        rep = self.replicas[dst]
+        if rep.head == GENESIS:
+            return
+        key = (dst, src, rep.head)
+        if key in self._announced:
+            return
+        self._announced.add(key)
+        self.stats["head_announces"] += 1
+        self._send_block(dst, src, rep.blocks[rep.head])
+
+    # -- catch-up ------------------------------------------------------------- #
+    def _request_catchup(self, dst: str, src: str, blk: Block) -> None:
+        self.stats["catchup_requests"] += 1
+        self._transfer(dst, src, f"req:{blk.hash[:12]}", REQUEST_NBYTES,
+                       lambda: self._serve_catchup(src, dst, blk),
+                       ("chainreq", src, dst, blk.hash))
+
+    def _serve_catchup(self, src: str, dst: str, blk: Block) -> None:
+        """``src`` answers with the ancestors of the orphaned block it holds
+        (oldest first, bounded); the orphan pool connects them on arrival."""
+        rep = self.replicas.get(src)
+        if rep is None:
+            return
+        batch: List[Block] = []
+        cur = blk.prev_hash
+        while cur != GENESIS and cur in rep.blocks and len(batch) < MAX_CATCHUP:
+            batch.append(rep.blocks[cur])
+            cur = rep.blocks[cur].prev_hash
+        if not batch:
+            return
+        batch.reverse()
+        self.stats["catchup_blocks"] += len(batch)
+        self._transfer(src, dst, f"chain:{blk.hash[:12]}",
+                       sum(b.nbytes() for b in batch),
+                       lambda: self._deliver_batch(dst, src, batch),
+                       ("chainresp", src, dst, blk.hash))
+
+    def _deliver_batch(self, dst: str, src: str, batch: List[Block]) -> None:
+        rep = self.replicas.get(dst)
+        if rep is None:
+            return
+        for b in batch:
+            rep.import_block(b)
+        # a truncated batch (divergence deeper than MAX_CATCHUP) parks whole
+        # in the orphan pool: iterate — request the next, older ancestor
+        # span below the batch's root so deep syncs make progress
+        oldest = batch[0]
+        if oldest.hash not in rep.blocks:
+            self._request_catchup(dst, src, oldest)
+        self._post_import(dst)
+        # heads may still disagree (ours was heavier): tell the peer once
+        self._announce_head(dst, src)
+
+    # -- reconciliation / introspection --------------------------------------- #
+    def resync(self) -> None:
+        """Every replica announces its head to every peer (heal/up hook)."""
+        for nid in sorted(self.replicas):
+            rep = self.replicas[nid]
+            if rep.head == GENESIS:
+                continue
+            blk = rep.blocks[rep.head]
+            for peer in sorted(self.replicas):
+                if peer != nid:
+                    self._send_block(nid, peer, blk)
+
+    def heads(self) -> Dict[str, str]:
+        return {nid: rep.head for nid, rep in self.replicas.items()}
+
+    def converged(self, only_up: bool = True) -> bool:
+        """One canonical head across replicas (down nodes excluded when the
+        fabric knows about churn and ``only_up``)."""
+        heads = set()
+        for nid, rep in self.replicas.items():
+            if only_up and self.fabric is not None \
+                    and not self.fabric.is_up(nid):
+                continue
+            heads.add(rep.head)
+        return len(heads) <= 1
+
+    def state_digests(self, only_up: bool = True) -> Dict[str, str]:
+        out = {}
+        for nid, rep in self.replicas.items():
+            if only_up and self.fabric is not None \
+                    and not self.fabric.is_up(nid):
+                continue
+            out[nid] = rep.executor.contract.state_digest()
+        return out
+
+    def finality(self) -> List[float]:
+        """Per-tx finality latency: submit -> executed on *every* replica
+        (only txs that reached all replicas count)."""
+        n = len(self.replicas)
+        out = []
+        for txid, execs in self.tx_exec_t.items():
+            t0 = self.tx_submit_t.get(txid)
+            if t0 is not None and len(execs) == n:
+                out.append(max(execs.values()) - t0)
+        return out
+
+    def totals(self, key: str) -> int:
+        return sum(rep.stats.get(key, 0) for rep in self.replicas.values())

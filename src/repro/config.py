@@ -231,10 +231,18 @@ class FaultScenario:
     """One injectable network fault (interpreted by repro.net.faults).
 
     Fire either round-phased (``round`` + ``when``, Sync engine) or at an
-    absolute simulated time (``at_time`` >= 0, both engines)."""
-    action: str                  # 'down' | 'up' | 'isolate' | 'heal' | 'slow_link'
+    absolute simulated time (``at_time`` >= 0, both engines).
+
+    Actions: ``down``/``up`` (node churn), ``isolate``/``heal`` (single-node
+    partition), ``slow_link`` (``node``~``node_b`` bandwidth / ``factor``),
+    ``partition`` (group split: ``node`` and ``node_b`` are comma-separated
+    member lists; unlisted nodes — including the engine's ``orchestrator``
+    chain replica — join group 0; both sides keep sealing, so the chain
+    forks), ``byzantine_sealer`` (the named silo's sealer starts
+    equivocating — two blocks per height, different halves of the swarm)."""
+    action: str                  # see Actions above
     node: str = ""
-    node_b: str = ""             # second endpoint for 'slow_link'
+    node_b: str = ""             # second endpoint / second partition group
     factor: float = 1.0          # bandwidth divisor for 'slow_link'
     round: int = 0               # sync-engine round trigger (ignored if < 1)
     when: str = "train"          # 'train' (round start) | 'score' (pre-scoring)
@@ -280,6 +288,10 @@ class FedConfig:
     # int8-delta noise floor: elide quant tiles whose delta never exceeds
     # this many base-tile quantization steps (0 disables elision)
     delta_rtol: float = 1.0
+    # long-chain compaction: every k-th announced envelope ships whole
+    # (int8 keyframe), so late joiners / post-reorg catch-up never walk more
+    # than k-1 delta links (0 = every delta references the previous round)
+    keyframe_every: int = 0
     # simulated store-network fabric; None = instantaneous in-memory store
     net: Optional[NetConfig] = None
 

@@ -1,7 +1,8 @@
 """UnifyFL core: the paper's contribution.
 
 store       -- content-addressed distributed storage (IPFS analogue)
-ledger      -- PoA hash-chained replicated log (private-Ethereum analogue)
+ledger      -- PoA hash-chained log: single-replica facade over repro.chain
+               (the genuinely replicated Clique chain over the WAN fabric)
 contract    -- the UnifyFL smart contract (paper Algorithm 1)
 scoring     -- accuracy / loss / MultiKRUM scorers (paper §2.6)
 policies    -- aggregation + score policies (paper §3.4.4)

@@ -15,13 +15,21 @@ machine executed by the ledger.
                                      accept scores').
   getLatestModelsWithScores()     -- view: latest model set + score lists.
 
-Scorer sampling uses block-hash randomness (on-chain determinism). Elastic
+Scorer sampling uses content-addressed randomness (CID + round + membership
+digest): on-chain deterministic *and* stable across chain reorgs. Elastic
 membership (register/deregister), heartbeats, and deadline-based scorer
 reassignment extend the paper's design to node-failure handling.
+
+The contract is a *pure re-executable* state machine: every mutation happens
+inside a ``tx_*`` handler, ``reset()`` restores genesis state in place (so
+views held by runtimes stay valid across a chain reorg's re-execution), and
+``state_digest()`` canonically hashes the full state — two replicas that
+executed the same chain are byte-identical.
 """
 from __future__ import annotations
 
 import hashlib
+import json
 import random
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Set
@@ -38,6 +46,7 @@ class ModelEntry:
     round: int
     scores: Dict[str, float] = field(default_factory=dict)
     assigned: List[str] = field(default_factory=list)
+    replaced: Set[str] = field(default_factory=set)  # reassigned-away scorers
     finalized: bool = False
 
 
@@ -51,10 +60,45 @@ class UnifyFLContract:
         self.models: Dict[str, ModelEntry] = {}          # cid -> entry
         self.latest_by_owner: Dict[str, str] = {}        # owner -> cid
         self.deferred: List[Dict] = []                   # sync stragglers
+        # scores that arrived before their model / its assignment (the
+        # replicated chain merges forks by re-sealing, so cross-origin tx
+        # order is not causal): buffered deterministically, drained when the
+        # model is assigned. Part of state — digested.
+        self.pending_scores: Dict[str, Dict[str, float]] = {}
         self.busy: Set[str] = set()                      # async idle tracking
         self.heartbeats: Dict[str, float] = {}
         self._emit = lambda e, p: None                   # wired by ledger
         self.log: List[Dict] = []
+
+    def reset(self) -> None:
+        """Back to genesis state, in place: the chain adapter re-executes the
+        canonical chain after a reorg; references held by runtimes survive."""
+        emit = self._emit
+        self.__init__(self.mode)
+        self._emit = emit
+
+    def state_digest(self) -> str:
+        """Canonical SHA-256 over the whole contract state — replicas that
+        executed the same chain produce the same digest, byte for byte."""
+        body = {
+            "mode": self.mode, "round": self.round, "phase": self.phase,
+            "aggregators": sorted(self.aggregators),
+            "busy": sorted(self.busy),
+            "heartbeats": {k: self.heartbeats[k]
+                           for k in sorted(self.heartbeats)},
+            "latest_by_owner": dict(sorted(self.latest_by_owner.items())),
+            "deferred": self.deferred,
+            "pending_scores": {cid: dict(sorted(sc.items()))
+                               for cid, sc in sorted(self.pending_scores.items())},
+            "models": {cid: {"owner": e.owner, "round": e.round,
+                             "scores": dict(sorted(e.scores.items())),
+                             "assigned": e.assigned,
+                             "replaced": sorted(e.replaced),
+                             "finalized": e.finalized}
+                       for cid, e in sorted(self.models.items())},
+        }
+        return hashlib.sha256(
+            json.dumps(body, sort_keys=True).encode()).hexdigest()
 
     # ------------------------------------------------------------------ #
     def execute(self, tx, blk) -> Any:
@@ -114,6 +158,11 @@ class UnifyFLContract:
 
     def tx_submit_model(self, sender: str, cid: str, blk=None, **_) -> bool:
         self._require(sender in self.aggregators, f"{sender} not registered")
+        # a model submission is itself a liveness proof: it refreshes the
+        # sender's heartbeat, so deadline-based scorer reassignment
+        # (tx_reassign_stale) keys on "did this silo's work land this round"
+        # without a separate heartbeat tx per round
+        self.heartbeats[sender] = blk.logical_time if blk else 0.0
         if self.mode == "sync":
             if self.phase != PHASE_TRAINING:
                 # straggler: submission deferred to the next round
@@ -133,12 +182,16 @@ class UnifyFLContract:
     def _sample_scorers(self, entry: ModelEntry, blk, pool: List[str]) -> List[str]:
         n = len(self.aggregators)
         need = n // 2 + 1  # the paper's de-biasing majority
-        # block-hash ^ cid-digest randomness: fully on-chain deterministic
-        # (Python's str hash is per-process salted — unusable in a contract)
-        cid_digest = int.from_bytes(
-            hashlib.sha256(entry.cid.encode()).digest()[:8], "big")
-        rng = random.Random((int(blk.hash[:16], 16) if blk else 0)
-                            ^ cid_digest)
+        # content-addressed randomness: seeded by the model CID (itself a
+        # SHA-256 of the weights), the round, and the membership snapshot —
+        # on-chain deterministic AND reorg-stable. Seeding from the containing
+        # block's hash would re-sample assignments whenever a fork re-seals
+        # the tx into a different block, invalidating scores already
+        # dispatched against the first assignment. (Python's str hash is
+        # per-process salted — unusable in a contract either way.)
+        seed_src = f"{entry.cid}|{entry.round}|{','.join(sorted(pool))}"
+        rng = random.Random(int.from_bytes(
+            hashlib.sha256(seed_src.encode()).digest()[:8], "big"))
         pool = sorted(pool)
         rng.shuffle(pool)
         return pool[:need]
@@ -159,6 +212,11 @@ class UnifyFLContract:
         self._emit("StartScoring", {"cid": entry.cid,
                                     "scorers": entry.assigned,
                                     "round": entry.round})
+        # drain scores that arrived ahead of this assignment (fork merges)
+        for sender, score in sorted(
+                self.pending_scores.pop(entry.cid, {}).items()):
+            if sender in entry.assigned:
+                self._apply_score(entry, sender, score)
 
     def tx_start_scoring(self, sender: str, blk=None, **_) -> Dict[str, List[str]]:
         self._require(self.mode == "sync", "start_scoring is a Sync call")
@@ -171,22 +229,39 @@ class UnifyFLContract:
                 out[cid] = entry.assigned
         return out
 
+    def _apply_score(self, entry: ModelEntry, sender: str,
+                     score: float) -> bool:
+        if sender in entry.replaced:
+            # reassigned away (missed its deadline): the late score is
+            # disregarded, not a revert (paper §3.2)
+            self._emit("ScoreRejectedReassigned", {"cid": entry.cid,
+                                                   "scorer": sender})
+            return False
+        self._require(sender in entry.assigned,
+                      f"{sender} not an assigned scorer for {entry.cid}")
+        if self.mode == "sync" and (self.phase != PHASE_SCORING
+                                    or entry.round != self.round):
+            # late score: disregarded (paper §3.2)
+            self._emit("ScoreRejectedLate", {"cid": entry.cid,
+                                             "scorer": sender})
+            return False
+        entry.scores[sender] = float(score)
+        self._emit("ScoreSubmitted", {"cid": entry.cid, "scorer": sender,
+                                      "score": float(score)})
+        return True
+
     def tx_submit_score(self, sender: str, cid: str, score: float,
                         blk=None, **_) -> bool:
         self._require(sender in self.aggregators, f"{sender} not registered")
         entry = self.models.get(cid)
-        self._require(entry is not None, f"unknown model {cid}")
-        self._require(sender in entry.assigned,
-                      f"{sender} not an assigned scorer for {cid}")
-        if self.mode == "sync" and (self.phase != PHASE_SCORING
-                                    or entry.round != self.round):
-            # late score: disregarded (paper §3.2)
-            self._emit("ScoreRejectedLate", {"cid": cid, "scorer": sender})
+        if entry is None or not entry.assigned:
+            # fork merges re-seal txs, so a score can land *before* its
+            # model or before the model's scorer assignment — buffer it;
+            # _assign_scorers drains the buffer through the same validation
+            self.pending_scores.setdefault(cid, {})[sender] = float(score)
+            self._emit("ScoreBuffered", {"cid": cid, "scorer": sender})
             return False
-        entry.scores[sender] = float(score)
-        self._emit("ScoreSubmitted", {"cid": cid, "scorer": sender,
-                                      "score": float(score)})
-        return True
+        return self._apply_score(entry, sender, score)
 
     def tx_end_scoring(self, sender: str, blk=None, **_) -> int:
         self._require(self.mode == "sync", "end_scoring is a Sync call")
@@ -197,23 +272,51 @@ class UnifyFLContract:
         self._emit("RoundFinalized", {"round": self.round})
         return self.round
 
-    def tx_reassign_scorer(self, sender: str, cid: str, dead: str,
-                           blk=None, **_) -> Optional[str]:
-        """Straggler/failure mitigation: replace a non-responsive scorer."""
-        entry = self.models.get(cid)
-        self._require(entry is not None, f"unknown model {cid}")
+    def _reassign(self, entry: ModelEntry, dead: str, blk) -> Optional[str]:
+        """Resample one non-responsive scorer's assignment (block-hash
+        randomness); its eventual late score is disregarded via ``replaced``."""
         if dead not in entry.assigned or dead in entry.scores:
             return None
+        entry.replaced.add(dead)
         candidates = [a for a in sorted(self.aggregators)
                       if a not in entry.assigned and a != entry.owner]
         if not candidates:
             entry.assigned.remove(dead)
             return None
-        rng = random.Random(int(blk.hash[:16], 16) if blk else 0)
+        # reorg-stable resampling (see _sample_scorers)
+        seed_src = f"{entry.cid}|{dead}|{','.join(candidates)}"
+        rng = random.Random(int.from_bytes(
+            hashlib.sha256(seed_src.encode()).digest()[:8], "big"))
         repl = rng.choice(candidates)
         entry.assigned[entry.assigned.index(dead)] = repl
-        self._emit("ScorerReassigned", {"cid": cid, "dead": dead, "new": repl})
+        self._emit("ScorerReassigned", {"cid": entry.cid, "dead": dead,
+                                        "new": repl})
         return repl
+
+    def tx_reassign_scorer(self, sender: str, cid: str, dead: str,
+                           blk=None, **_) -> Optional[str]:
+        """Straggler/failure mitigation: replace a non-responsive scorer."""
+        entry = self.models.get(cid)
+        self._require(entry is not None, f"unknown model {cid}")
+        return self._reassign(entry, dead, blk)
+
+    def tx_reassign_stale(self, sender: str, deadline_s: float,
+                          blk=None, **_) -> List[Dict]:
+        """Deadline-based failure detection (paper §3.2): every assigned
+        scorer of the current round whose last heartbeat is older than
+        ``deadline_s`` (vs block time) and who hasn't scored is resampled."""
+        now = blk.logical_time if blk else 0.0
+        out = []
+        for entry in self.models.values():
+            if entry.round != self.round or entry.finalized:
+                continue
+            for sid in list(entry.assigned):
+                if sid in entry.scores:
+                    continue
+                if self.heartbeats.get(sid, 0.0) + deadline_s < now:
+                    repl = self._reassign(entry, sid, blk)
+                    out.append({"cid": entry.cid, "dead": sid, "new": repl})
+        return out
 
     # -- views ---------------------------------------------------------------- #
     def get_latest_models_with_scores(self, exclude_owner: Optional[str] = None

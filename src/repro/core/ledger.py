@@ -1,172 +1,174 @@
-"""Replicated ordered ledger — the private-Ethereum analogue (paper §2.3).
+"""PoA ledger — a thin facade over one ``repro.chain`` replica.
 
-What the paper needs from its Geth/Clique chain is: (i) a total order over
-transactions visible to all silos, (ii) immutability / auditability,
-(iii) leader rotation without proof-of-work, (iv) deterministic contract
-execution with events. This module provides exactly that interface as a
-deterministic state machine:
+Historically this module *was* the chain ("every silo holds a replica;
+determinism guarantees agreement" — i.e. consensus assumed, never
+exercised). The real thing now lives in ``repro.chain``: per-silo
+``ChainReplica``s, Clique in-turn/out-of-turn sealing, heaviest-chain fork
+choice, block gossip over the WAN fabric, reorgs with deterministic contract
+re-execution. ``Ledger`` remains as **single-replica mode** — one solo
+replica impersonating the whole committee (sealing every height as the
+in-turn sealer) — used when no network fabric is configured and by
+direct-ledger tests/benchmarks. The public API is unchanged:
 
-  - Blocks are hash-chained (prev_hash -> hash) and sealed round-robin by the
-    authorized sealer set (Clique PoA).
-  - Transactions are applied to registered contracts in block order; contract
-    event emissions are delivered to subscribers.
-  - The chain persists as JSONL and replays on restart (crash recovery), and
-    verify() re-checks the whole hash chain (audit).
-  - 'On-chain randomness' for scorer sampling is derived from the block hash,
-    as the paper's smart contract would.
+  - blocks are hash-chained and sealed round-robin by the authorized sealer
+    set; transactions execute on the attached contract in block order, with
+    event emissions delivered to subscribers;
+  - the chain persists as JSONL and replays on restart; ``_replay`` validates
+    linkage + hashes as it loads and *stops at the first break* (a corrupt or
+    missing record cannot smuggle history past the audit);
+  - ``verify()`` re-checks the whole hash chain, seal schedule included;
+  - 'on-chain randomness' derives from block hashes.
 """
 from __future__ import annotations
 
-import hashlib
 import json
 import os
 import threading
-from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
+from repro.chain.adapter import ContractExecutor
+from repro.chain.replica import GENESIS, Block, ChainReplica, Tx
 
-@dataclass
-class Tx:
-    sender: str
-    method: str
-    args: Dict[str, Any]
-    nonce: int = 0
-
-    def to_json(self) -> Dict:
-        return {"sender": self.sender, "method": self.method,
-                "args": self.args, "nonce": self.nonce}
-
-
-@dataclass
-class Block:
-    height: int
-    prev_hash: str
-    sealer: str
-    txs: List[Tx]
-    logical_time: float
-    hash: str = ""
-
-    def compute_hash(self) -> str:
-        body = json.dumps({
-            "height": self.height, "prev": self.prev_hash,
-            "sealer": self.sealer, "time": self.logical_time,
-            "txs": [t.to_json() for t in self.txs]}, sort_keys=True)
-        return hashlib.sha256(body.encode()).hexdigest()
+__all__ = ["Ledger", "Block", "Tx", "GENESIS"]
 
 
 class Ledger:
-    """Single logical chain (every silo holds a replica; determinism of the
-    contract state machine guarantees replica agreement)."""
+    """Single logical chain: a solo ``ChainReplica`` behind the classic API."""
 
     def __init__(self, sealers: List[str], *, path: Optional[str] = None,
                  block_size: int = 16):
         if not sealers:
             raise ValueError("need at least one PoA sealer")
         self.sealers = list(sealers)
-        self.blocks: List[Block] = []
-        self.pending: List[Tx] = []
+        self._replica = ChainReplica("ledger", sealers, solo=True)
+        self._subs: List[Callable[[str, Dict], None]] = []
+        self._executor: Optional[ContractExecutor] = None
         self.path = path
         self.block_size = block_size
-        self._contract = None
-        self._subscribers: List[Callable[[str, Dict], None]] = []
         self._lock = threading.RLock()
-        self._nonce = 0
-        self.stats = {"txs": 0, "blocks": 0, "bytes": 0}
+        # height of the first broken record hit during replay (None = intact)
+        self.replay_stopped_at: Optional[int] = None
         if path and os.path.exists(path):
             self._replay()
 
     # -- wiring -------------------------------------------------------------- #
+    @property
+    def contract(self):
+        return self._executor.contract if self._executor is not None else None
+
     def attach_contract(self, contract) -> None:
-        self._contract = contract
-        contract._emit = self._emit
+        self._executor = ContractExecutor(contract, subscribers=self._subs)
+        self._replica.executor = self._executor
 
     def subscribe(self, fn: Callable[[str, Dict], None]) -> None:
-        self._subscribers.append(fn)
-
-    def _emit(self, event: str, payload: Dict) -> None:
-        for fn in list(self._subscribers):
-            fn(event, payload)
+        self._subs.append(fn)
 
     # -- chain ---------------------------------------------------------------- #
     @property
+    def blocks(self) -> List[Block]:
+        return self._replica.canonical()
+
+    @property
+    def pending(self) -> List[Tx]:
+        return list(self._replica.mempool.values())
+
+    @property
+    def stats(self) -> Dict:
+        return self._replica.stats
+
+    @property
     def head_hash(self) -> str:
-        return self.blocks[-1].hash if self.blocks else "genesis"
+        return self._replica.head
 
     @property
     def height(self) -> int:
-        return len(self.blocks)
+        return self._replica.height
 
     def submit(self, sender: str, method: str, logical_time: float = 0.0,
                **args) -> Any:
-        """Submit a tx; seals immediately (block_size=1 semantics by default
-        for responsiveness — Clique with period=0 seals on demand)."""
+        """Submit a tx; seals immediately (Clique period=0). A contract
+        revert raises to the caller — the block still stands (reverted txs
+        are part of history and are skipped deterministically on replay)."""
         with self._lock:
-            self._nonce += 1
-            tx = Tx(sender, method, args, self._nonce)
-            self.pending.append(tx)
-            self.stats["txs"] += 1
-            return self.seal(logical_time)
-
-    def seal(self, logical_time: float = 0.0) -> Any:
-        """Seal pending txs into a block and execute them on the contract."""
-        with self._lock:
-            if not self.pending:
-                return None
-            sealer = self.sealers[self.height % len(self.sealers)]
-            blk = Block(self.height, self.head_hash, sealer,
-                        self.pending, logical_time)
-            blk.hash = blk.compute_hash()
-            self.blocks.append(blk)
-            self.pending = []
-            self.stats["blocks"] += 1
-            ret = None
-            if self._contract is not None:
-                for tx in blk.txs:
-                    ret = self._contract.execute(tx, blk)
-            if self.path:
+            tx, blk, status, result = self._replica.submit(
+                sender, method, args, logical_time)
+            if blk is not None and self.path:
                 self._persist(blk)
-            return ret
+            if status == "revert":
+                raise result
+            return result
+
+    def seal(self, logical_time: float = 0.0) -> Optional[Block]:
+        """Seal any pending txs into a block (no-op when the pool is empty)."""
+        with self._lock:
+            blk = self._replica.seal(logical_time)
+            if blk is not None and self.path:
+                self._persist(blk)
+            return blk
 
     def block_randomness(self, height: int = -1) -> int:
         """Deterministic 'on-chain' randomness from a block hash."""
-        blk = self.blocks[height]
-        return int(blk.hash[:16], 16)
+        return self._replica.block_randomness(height)
 
     def verify(self) -> bool:
-        prev = "genesis"
-        for blk in self.blocks:
-            if blk.prev_hash != prev or blk.hash != blk.compute_hash():
-                return False
-            if blk.sealer not in self.sealers:
-                return False
-            prev = blk.hash
-        return True
+        return self._replica.verify()
 
     # -- persistence / crash recovery ---------------------------------------- #
     def _persist(self, blk: Block) -> None:
-        rec = {"height": blk.height, "prev": blk.prev_hash,
-               "sealer": blk.sealer, "time": blk.logical_time,
-               "hash": blk.hash, "txs": [t.to_json() for t in blk.txs]}
-        line = json.dumps(rec) + "\n"
+        line = json.dumps(blk.to_json()) + "\n"
         self.stats["bytes"] += len(line)
         with open(self.path, "a") as f:
             f.write(line)
 
     def _replay(self) -> None:
+        """Load the JSONL chain, auditing as we go: a record whose linkage,
+        stored hash, or recomputed hash is wrong ends the replay *there* —
+        the intact prefix loads, the break and everything after it do not.
+        The broken suffix is rotated to ``<path>.corrupt`` (preserved, never
+        deleted) and the file is truncated to the valid prefix, so blocks
+        sealed after the recovery append onto a well-formed chain instead of
+        hiding behind the break. Note: the on-disk format is v2 as of the
+        chain subsystem (block hashes cover difficulty/salt/txid) — a file
+        written by the pre-chain Ledger fails the hash audit at its first
+        record and lands in ``.corrupt`` wholesale."""
+        valid_bytes = 0
         with open(self.path) as f:
             for line in f:
-                rec = json.loads(line)
-                txs = [Tx(t["sender"], t["method"], t["args"], t["nonce"])
-                       for t in rec["txs"]]
-                blk = Block(rec["height"], rec["prev"], rec["sealer"], txs,
-                            rec["time"], rec["hash"])
-                self.blocks.append(blk)
-                self._nonce = max(self._nonce, max((t.nonce for t in txs),
-                                                   default=0))
+                try:
+                    rec = json.loads(line)
+                    txs = [Tx(t["sender"], t["method"], t["args"],
+                              t.get("nonce", 0), t.get("txid", ""))
+                           for t in rec["txs"]]
+                    blk = Block(rec["height"], rec["prev"], rec["sealer"],
+                                txs, rec["time"], rec.get("difficulty", 2),
+                                rec.get("salt", 0), rec["hash"])
+                except (ValueError, KeyError, TypeError):
+                    # unparseable record — typically a torn final line from
+                    # a crash mid-append: same break semantics as a failed
+                    # audit, the intact prefix survives
+                    self.replay_stopped_at = self._replica.height
+                    break
+                # the replica's own audit is the arbiter: anything but a
+                # clean head extension (bad hash/seal, unknown or non-head
+                # parent, height skip) is the break
+                if self._replica.import_block(blk) != "extended":
+                    self.replay_stopped_at = self._replica.height
+                    break
+                valid_bytes += len(line.encode())
+                self._replica._seq = max(
+                    self._replica._seq,
+                    max((t.nonce for t in txs), default=0))
+        if self.replay_stopped_at is not None:
+            with open(self.path, "rb") as f:
+                data = f.read()
+            with open(self.path + ".corrupt", "ab") as f:
+                f.write(data[valid_bytes:])
+            with open(self.path, "wb") as f:
+                f.write(data[:valid_bytes])
 
     def replay_into(self, contract) -> None:
-        """Re-execute the whole chain into a fresh contract (restart path)."""
+        """Re-execute the whole loaded chain into a fresh contract (restart
+        path); reverted txs are skipped deterministically."""
         self.attach_contract(contract)
         for blk in self.blocks:
-            for tx in blk.txs:
-                contract.execute(tx, blk)
+            self._executor.execute_block(blk)

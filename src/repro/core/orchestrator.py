@@ -11,6 +11,16 @@ Fault tolerance beyond the paper: heartbeat-based failure detection, scorer
 reassignment on deadline, CAS-backed checkpoint/restart (a crashed silo
 replays the ledger and resumes from its last committed CID), and elastic
 membership between rounds.
+
+Orchestration state itself is decentralized when a network fabric is
+configured: ``_wire`` stands up one ``repro.chain`` replica per silo (plus
+one for the engine's own control txs) instead of a shared ``Ledger``
+singleton. Every submit goes via the submitter's *local* replica
+(sealed immediately, gossiped as charged fabric transfers) and every read is
+read-your-replica — stale during partitions, reconciled by fork choice +
+contract re-execution after the heal. A tx that reverts against a stale
+local replica (e.g. a score for a model whose block hasn't landed here yet)
+retries after a short resync delay rather than crashing the engine.
 """
 from __future__ import annotations
 
@@ -40,6 +50,11 @@ class SiloPolicy:
     agg_policy: str = "all"
     score_policy: str = "median"
     k: int = 2
+
+
+ORCH_NODE = "orchestrator"   # the engine's own chain replica / tx sender
+CHAIN_RETRY_S = 0.25         # resubmit delay after a stale-replica revert
+CHAIN_RETRIES = 8            # bounded: 8 x 0.25s covers any preset's RTT
 
 
 class SiloRuntime:
@@ -79,24 +94,52 @@ class SiloRuntime:
             else "accuracy"
         self._rng = random.Random(cluster.silo_id)
         self._flat_spec = None  # cached flatten spec of this config's params
+        self._announces = 0     # envelopes announced (keyframe cadence)
 
     # ------------------------------------------------------------------ #
     @property
     def silo_id(self) -> str:
         return self.cluster.silo_id
 
-    def bind_ledger(self, ledger: Ledger):
-        """Late-bind the shared ledger (created once all silos are added)."""
+    def bind_ledger(self, ledger):
+        """Late-bind this silo's ledger handle: the shared single-replica
+        ``Ledger`` (no fabric) or this silo's own ``chain.LedgerView``
+        (replicated mode — reads then come from the local replica)."""
         self.ledger = ledger
+        contract = getattr(ledger, "contract", None)
+        if contract is not None:
+            self.contract = contract
+
+    def _submit(self, method: str, *, _retries: int = 0, **args):
+        """Submit via the silo's local replica. Replicated-chain reality:
+        a tx can revert against a *stale* replica (its prerequisite block —
+        a model submission, a reassignment — hasn't landed here yet). Those
+        reverts retry after a short resync delay, bounded; exhausted or
+        non-retried reverts are traced and dropped (the paper's 'blockchain
+        will no longer accept' semantics, seen from the client side)."""
+        try:
+            return self.ledger.submit(self.silo_id, method,
+                                      logical_time=self.env.now, **args)
+        except PermissionError:
+            if _retries > 0 and self.alive:
+                self.env.schedule(
+                    CHAIN_RETRY_S,
+                    # re-check liveness at fire time: the silo may crash
+                    # inside the retry window
+                    lambda: (self._submit(method, _retries=_retries - 1,
+                                          **args) if self.alive else None),
+                    f"{self.silo_id}:resubmit:{method}")
+            else:
+                self.env.trace.append(
+                    (self.env.now, f"{self.silo_id}:tx-revert:{method}"))
+            return None
 
     def register(self):
-        self.ledger.submit(self.silo_id, "register",
-                           logical_time=self.env.now)
+        self._submit("register")
 
     def heartbeat(self):
         if self.alive:
-            self.ledger.submit(self.silo_id, "heartbeat",
-                               logical_time=self.env.now)
+            self._submit("heartbeat")
 
     def fail(self):
         """Crash the silo (stops reacting to events)."""
@@ -154,10 +197,17 @@ class SiloRuntime:
     def _delta_base(self):
         """(base_cid, base_vec) for delta coding: the silo's last announced
         model *as receivers decode it* (pulled through this silo's own
-        decoded cache, so quantization error never compounds)."""
+        decoded cache, so quantization error never compounds).
+
+        Long-chain compaction: every ``fed.keyframe_every``-th announced
+        envelope ships whole (no base), so a late joiner or a post-reorg
+        catch-up never walks more than ``keyframe_every - 1`` delta links."""
         if self.last_global_cid is None or \
                 not wire.resolve_method(self.fed.compression).endswith("-delta"):
             return ("", None)
+        k = getattr(self.fed, "keyframe_every", 0)
+        if k > 0 and self._announces % k == 0:
+            return ("", None)   # whole-model keyframe bounds the chain walk
         try:
             return (self.last_global_cid,
                     self.get_decoded(self.last_global_cid).vec())
@@ -190,6 +240,7 @@ class SiloRuntime:
             cid = self.store.put(payload)
             self.last_cid = cid
             self.last_global_cid = cid
+            self._announces += 1
             fab = self.store.fabric
             if fab is not None:
                 # advertise the fresh CID (and its delta base, so replication
@@ -201,8 +252,12 @@ class SiloRuntime:
                 else -ev["loss"]
             self.metrics.append({"round": self.rounds_done, "t": self.env.now,
                                  "local": ev, **m})
-            self.ledger.submit(self.silo_id, "submit_model", cid=cid,
-                               logical_time=self.env.now)
+            # the submission doubles as the heartbeat (the contract
+            # refreshes it in tx_submit_model): the liveness signal the
+            # deadline-based scorer reassignment keys on (paper §3.2) — a
+            # dead or partitioned silo's submission block never lands on
+            # the engine's replica, so its heartbeat goes stale there.
+            self._submit("submit_model", cid=cid, _retries=CHAIN_RETRIES)
             on_done(self, cid)
 
         self.env.schedule(duration, finish, f"{self.silo_id}:submit")
@@ -220,8 +275,7 @@ class SiloRuntime:
         cids = [c for c in cids]
         if not self.alive or not cids:
             return
-        self.ledger.submit(self.silo_id, "set_busy", busy=True,
-                           logical_time=self.env.now)
+        self._submit("set_busy", busy=True)
         t0 = time.perf_counter()
         decoded, kept = [], []
         for cid in cids:
@@ -236,8 +290,7 @@ class SiloRuntime:
                 self.env.trace.append(
                     (self.env.now, f"{self.silo_id}:score-fetch-fail:{cid[:8]}"))
         if not kept:
-            self.ledger.submit(self.silo_id, "set_busy", busy=False,
-                               logical_time=self.env.now)
+            self._submit("set_busy", busy=False)
             return
         scores = scorebatch.score_round_batch(
             self.cluster, decoded, self.flat_spec(), method=self.score_method)
@@ -249,11 +302,11 @@ class SiloRuntime:
             if not self.alive:
                 return
             for cid, score in zip(kept, scores):
-                self.ledger.submit(self.silo_id, "submit_score", cid=cid,
-                                   score=float(score),
-                                   logical_time=self.env.now)
-            self.ledger.submit(self.silo_id, "set_busy", busy=False,
-                               logical_time=self.env.now)
+                # can revert against a stale replica (the model's block or a
+                # reassignment hasn't landed locally yet): bounded retries
+                self._submit("submit_score", cid=cid, score=float(score),
+                             _retries=CHAIN_RETRIES)
+            self._submit("set_busy", busy=False)
 
         self.env.schedule(duration, finish,
                           f"{self.silo_id}:score:{kept[0][:8]}x{len(kept)}")
@@ -306,7 +359,8 @@ class BaseOrchestrator:
         self.contract = UnifyFLContract(mode=fed.mode)
         self.silos: List[SiloRuntime] = []
         self._ledger_path = ledger_path
-        self.ledger: Optional[Ledger] = None
+        self.ledger = None        # Ledger (single-replica) or chain.LedgerView
+        self.chain = None         # chain.ChainNetwork in replicated mode
         self.fabric = None
         self.prefetcher = None
         self.gossip = None
@@ -357,11 +411,29 @@ class BaseOrchestrator:
     def _wire(self):
         if self.fed.net is not None and self.fabric is None:
             self._build_net()
-        self.ledger = Ledger([s.silo_id for s in self.silos],
-                             path=self._ledger_path)
-        self.ledger.attach_contract(self.contract)
+        sealer_ids = [s.silo_id for s in self.silos]
+        if self.fabric is not None:
+            # replicated mode: one chain replica per silo + one for the
+            # engine's control txs — no Ledger singleton anywhere; blocks
+            # gossip as charged fabric transfers, so orchestration itself
+            # experiences latency, partitions and churn. NOTE: ledger_path
+            # persistence is solo-mode only — replicas are in-memory, and a
+            # restarted replica would catch up from peers, not disk.
+            from repro.chain import ChainNetwork
+            self.chain = ChainNetwork(self.env, self.fabric,
+                                      sealers=sealer_ids + [ORCH_NODE])
+            for s in self.silos:
+                s.bind_ledger(self.chain.add_replica(
+                    s.silo_id, UnifyFLContract(self.fed.mode)))
+            self.ledger = self.chain.add_replica(ORCH_NODE, self.contract)
+            if self._fault_injector is not None:
+                self._fault_injector.chain = self.chain
+        else:
+            self.ledger = Ledger(sealer_ids, path=self._ledger_path)
+            self.ledger.attach_contract(self.contract)
+            for s in self.silos:
+                s.bind_ledger(self.ledger)
         for s in self.silos:
-            s.bind_ledger(self.ledger)
             s.register()
 
     def _by_id(self, sid) -> Optional[SiloRuntime]:
@@ -371,10 +443,13 @@ class BaseOrchestrator:
         return None
 
     def _mark_round(self, rnd: int, silo_id: Optional[str] = None):
-        """Log a round boundary with the fabric's cumulative WAN bytes."""
+        """Log a round boundary with the fabric's cumulative WAN bytes
+        (``chain_bytes`` separates consensus gossip from store traffic)."""
         self.round_log.append(
             {"round": rnd, "silo": silo_id, "t": self.env.now,
-             "wan_bytes": self.fabric.stats["bytes"] if self.fabric else 0})
+             "wan_bytes": self.fabric.stats["bytes"] if self.fabric else 0,
+             "chain_bytes":
+                 self.fabric.stats["chain_bytes"] if self.fabric else 0})
 
     def live(self) -> List[SiloRuntime]:
         return [s for s in self.silos if s.alive]
@@ -404,23 +479,34 @@ class SyncOrchestrator(BaseOrchestrator):
     def run(self, rounds: int) -> Dict:
         self._wire()
         submitted: Dict[int, set] = {}
+        cids: Dict[int, set] = {}
         for r in range(1, rounds + 1):
             self.ledger.submit("orchestrator", "start_training",
                                logical_time=self.env.now)
             self._net_phase(r, "train")
+            t_round = self.env.now
             submitted[r] = set()
+            cids[r] = set()
             deadline = (self.env.now + self.fed.round_deadline_s
                         if self.fed.round_deadline_s > 0 else None)
 
             def on_submit(silo, cid, r=r):
                 submitted[r].add(silo.silo_id)
+                cids[r].add(cid)
 
             for s in self.live():
                 s.pull_and_merge()
                 s.train_and_submit(on_submit)
-            # barrier: all live silos submitted, bounded by the deadline
-            self._run_window(deadline, lambda: all(
-                s.silo_id in submitted[r] for s in self.live()))
+
+            def barrier(r=r):
+                # all live silos submitted AND their submissions are visible
+                # on the engine's own replica (read-your-replica: with a
+                # replicated chain the blocks must *arrive* — a partitioned
+                # silo's model never does, and the deadline breaks the wait)
+                return all(s.silo_id in submitted[r] for s in self.live()) \
+                    and all(c in self.contract.models for c in cids[r])
+
+            self._run_window(deadline, barrier)
             # scoring phase
             self._net_phase(r, "score")
             assignments = self.ledger.submit("orchestrator", "start_scoring",
@@ -448,7 +534,7 @@ class SyncOrchestrator(BaseOrchestrator):
                                for e in self.contract.get_round_models(r))
 
                 self._run_window(score_deadline, scores_complete)
-                self._reassign_dead_scorers(r)
+                self._reassign_dead_scorers(r, t_round)
                 self._run_window(
                     (score_deadline + self.fed.scorer_deadline_s)
                     if score_deadline is not None else None, scores_complete)
@@ -486,10 +572,33 @@ class SyncOrchestrator(BaseOrchestrator):
         scores = multikrum_scores_for_decoded(decoded, self.fed.multikrum_m)
         for e, sc in zip(entries, scores):
             for sid in e.assigned:
-                self.ledger.submit(sid, "submit_score", cid=e.cid,
-                                   score=float(sc), logical_time=self.env.now)
+                # each score submits via the scorer's own replica (replicated
+                # mode); a stale-replica revert drops that one score
+                silo = self._by_id(sid)
+                led = silo.ledger if silo is not None and silo.ledger \
+                    is not None else self.ledger
+                try:
+                    led.submit(sid, "submit_score", cid=e.cid,
+                               score=float(sc), logical_time=self.env.now)
+                except PermissionError:
+                    self.env.trace.append(
+                        (self.env.now, f"{sid}:tx-revert:submit_score"))
 
-    def _reassign_dead_scorers(self, r: int):
+    def _reassign_dead_scorers(self, r: int, t_round: float):
+        # deadline pass (paper §3.2): any assigned scorer whose heartbeat
+        # predates this round's start — dead, or partitioned away so its
+        # heartbeat block never reached the engine's replica — is resampled,
+        # and its eventual late score is disregarded by the contract
+        if self.env.now > t_round:
+            stale = self.ledger.submit("orchestrator", "reassign_stale",
+                                       deadline_s=self.env.now - t_round,
+                                       logical_time=self.env.now) or []
+            for d in stale:
+                rs = self._by_id(d["new"]) if d["new"] else None
+                if rs and rs.alive:
+                    rs.score_async(d["cid"],
+                                   self.contract.models[d["cid"]].owner)
+        # alive-flag pass: covers crashes the heartbeat hasn't aged out yet
         for e in self.contract.get_round_models(r):
             for sid in list(e.assigned):
                 if sid in e.scores:
@@ -510,7 +619,8 @@ class AsyncOrchestrator(BaseOrchestrator):
 
     def run(self, rounds: int) -> Dict:
         self._wire()
-        self.contract.round = 1
+        # (no direct contract mutation here: the first submit_model tx opens
+        # round 1 — all state changes go through the chain)
         # subscribe scorers to StartScoring events
         def on_event(event: str, payload: Dict):
             if event == "StartScoring":

@@ -217,6 +217,25 @@ def encode_update(params, fed, *, spec=None,
                       delta_rtol=getattr(fed, "delta_rtol", 1.0))
 
 
+def chain_depth_of(node, cid: str, *, max_links: int = 64) -> int:
+    """Delta links under ``cid`` on a store node's local blocks (0 = whole
+    model). This is the walk a late joiner / post-reorg catch-up performs;
+    ``FedConfig.keyframe_every`` bounds it by shipping periodic whole-model
+    keyframes. Stops where the chain leaves the node."""
+    from repro.core.store import deserialize_pytree
+    depth, cur = 0, cid
+    while depth < max_links:
+        data = node.read_local(cur)
+        if data is None:
+            break
+        base = base_cid_of_store(deserialize_pytree(data))
+        if not base:
+            break
+        depth += 1
+        cur = base
+    return depth
+
+
 def base_cid_of_store(flat: Dict) -> str:
     """The delta-base CID a store payload references ('' when none).
     Accepts both plain-key payload dicts (``to_store`` output) and

@@ -5,10 +5,14 @@ resource on the orchestrator's ``SimEnv``:
 
   * every CID transfer serializes its 1 MiB blocks over the (src, dst) link
     and is *charged* simulated time: queue wait + latency + seeded jitter +
-    blocks / bandwidth. Links carry two QoS lanes: demand traffic (fetch /
-    replica / reroute) serializes only behind other demand transfers, while
-    background traffic (prefetch / gossip replication) is scavenger-class —
-    it queues behind *everything* and never delays a demand fetch;
+    blocks / bandwidth. Links carry three QoS lanes: demand traffic (fetch /
+    replica / reroute) serializes only behind other demand transfers;
+    control traffic (``chain`` — consensus block gossip) pipelines among
+    itself, occupying the lane for its transmission time only (propagation
+    latency is concurrent), so a consensus storm never starves model
+    transfers; background traffic (prefetch / gossip replication) is
+    scavenger-class — it queues behind *everything* and never delays a
+    demand fetch;
   * DHT-style provider records track which nodes hold which CID; fetches are
     served from the cheapest reachable replica, not always the origin;
   * faults are first-class: network partitions, node churn (with in-flight
@@ -39,7 +43,8 @@ class UnreachableError(IOError):
 
 @dataclass(frozen=True)
 class TransferRecord:
-    kind: str       # 'fetch' | 'replica' | 'reroute' | 'replicate' | 'prefetch'
+    kind: str   # 'fetch' | 'replica' | 'reroute' | 'replicate' | 'prefetch'
+    #             | 'chain' (consensus block gossip / catch-up)
     src: str
     dst: str
     cid: str
@@ -77,7 +82,7 @@ class NetFabric:
         self.trace: List[TransferRecord] = []
         self.stats = {"transfers": 0, "bytes": 0, "queue_wait_s": 0.0,
                       "busy_s": 0.0, "reroutes": 0, "replica_serves": 0,
-                      "cancelled": 0}
+                      "cancelled": 0, "chain_bytes": 0}
 
     # -- membership --------------------------------------------------------- #
     def register_node(self, node_id: str) -> None:
@@ -196,13 +201,15 @@ class NetFabric:
                                f"net:slow-link:{a}~{b}:x{factor:g}"))
 
     # -- transfer scheduling ------------------------------------------------ #
-    def _duration_s(self, src: str, dst: str, nbytes: int) -> float:
+    def _cost_parts(self, src: str, dst: str,
+                    nbytes: int) -> Tuple[float, float]:
+        """(serialization seconds, propagation latency + jitter seconds)."""
         prof = self.topology.link(src, dst)
         factor = self._degraded.get(_link_key(src, dst), 1.0)
         n_blocks = max(1, -(-int(nbytes) // self.chunk_bytes))
         jitter = self._rng.uniform(0.0, prof.jitter_s) if prof.jitter_s else 0.0
-        return prof.latency_s + jitter + \
-            n_blocks * prof.block_s(self.chunk_bytes) * factor
+        return (n_blocks * prof.block_s(self.chunk_bytes) * factor,
+                prof.latency_s + jitter)
 
     def transfer(self, src: str, dst: str, cid: str, nbytes: int, *,
                  kind: str = "fetch") -> float:
@@ -212,13 +219,23 @@ class NetFabric:
         if not self.reachable(src, dst):
             raise UnreachableError(f"{src}->{dst} unreachable "
                                    f"(partition or churn)")
-        duration = self._duration_s(src, dst, nbytes)
+        ser, lat = self._cost_parts(src, dst, nbytes)
+        duration = ser + lat
         lk = _link_key(src, dst)
-        fg, bg = (lk, "fg"), (lk, "bg")
-        if kind in _BACKGROUND:
-            # background waits for both lanes; demand never waits for it
+        fg, bg, ctl = (lk, "fg"), (lk, "bg"), (lk, "ctl")
+        if kind == "chain":
+            # control plane: consensus messages are tiny and pipeline —
+            # they serialize only among themselves, and only their
+            # *transmission* time occupies the lane (propagation latency is
+            # concurrent, not head-of-line blocking). A fork storm therefore
+            # never starves model transfers off the link.
+            start = max(self.env.now, self._busy.get(ctl, 0.0))
+            self._busy[ctl] = start + ser
+            duration = ser + lat        # the receiver still waits for both
+        elif kind in _BACKGROUND:
+            # background waits for every lane; demand never waits for it
             start = max(self.env.now, self._busy.get(fg, 0.0),
-                        self._busy.get(bg, 0.0))
+                        self._busy.get(bg, 0.0), self._busy.get(ctl, 0.0))
             self._busy[bg] = start + duration
         else:
             start = max(self.env.now, self._busy.get(fg, 0.0))
@@ -236,6 +253,10 @@ class NetFabric:
             self.stats["reroutes"] += 1
         if kind in ("replica", "reroute"):
             self.stats["replica_serves"] += 1
+        if kind == "chain":
+            # consensus traffic class: block gossip / catch-up (small,
+            # latency-critical — pipelines in its own control lane above)
+            self.stats["chain_bytes"] += int(nbytes)
         return end - self.env.now
 
     def transfer_async(self, src: str, dst: str, cid: str, nbytes: int,

@@ -1,4 +1,4 @@
-"""Per-round / timed fault injection for the WAN fabric.
+"""Per-round / timed fault injection for the WAN fabric (and the chain).
 
 Scenarios live in ``NetConfig.scenarios`` (plain frozen dataclasses, see
 ``repro.config.FaultScenario``) so a FedConfig fully describes a faulty run:
@@ -9,7 +9,13 @@ Scenarios live in ``NetConfig.scenarios`` (plain frozen dataclasses, see
 
 Actions: ``down`` / ``up`` (node churn — cancels that node's in-flight
 transfers), ``isolate`` / ``heal`` (link partitions), ``slow_link``
-(bandwidth degraded by ``factor`` — a slow-link straggler).
+(bandwidth degraded by ``factor`` — a slow-link straggler), ``partition``
+(group split of the swarm: both sides keep sealing their own chain forks),
+``byzantine_sealer`` (the named replica's sealer equivocates).
+
+When a replicated chain is attached (``FaultInjector.chain``), ``heal`` and
+``up`` also trigger ``ChainNetwork.resync()`` — reconnection turns a healed
+partition into catch-up traffic, reorgs, and (eventually) one head.
 """
 from __future__ import annotations
 
@@ -18,12 +24,14 @@ from typing import Callable, Iterable, Optional
 from repro.config import FaultScenario
 from repro.net.fabric import NetFabric
 
-ACTIONS = ("down", "up", "isolate", "heal", "slow_link")
+ACTIONS = ("down", "up", "isolate", "heal", "slow_link", "partition",
+           "byzantine_sealer")
 
 
 def apply_scenario(fabric: NetFabric, sc: FaultScenario, *,
                    on_down: Optional[Callable[[str], None]] = None,
-                   on_up: Optional[Callable[[str], None]] = None) -> None:
+                   on_up: Optional[Callable[[str], None]] = None,
+                   chain=None) -> None:
     if sc.action == "down":
         fabric.node_down(sc.node)
         if on_down is not None:
@@ -38,20 +46,37 @@ def apply_scenario(fabric: NetFabric, sc: FaultScenario, *,
         fabric.heal()
     elif sc.action == "slow_link":
         fabric.degrade_link(sc.node, sc.node_b, sc.factor)
+    elif sc.action == "partition":
+        groups = [[n for n in g.split(",") if n]
+                  for g in (sc.node, sc.node_b) if g]
+        if len(groups) == 1:
+            # single-group spec: listed nodes split away from everyone else
+            # (unlisted nodes always land in group 0)
+            groups = [[], groups[0]]
+        fabric.partition(*groups)
+    elif sc.action == "byzantine_sealer":
+        if chain is not None and sc.node in chain.replicas:
+            chain.replicas[sc.node].byzantine = "equivocate"
+            fabric.env.trace.append(
+                (fabric.env.now, f"chain:byzantine:{sc.node}"))
     else:
         raise ValueError(f"unknown fault action {sc.action!r} "
                          f"(choose from {ACTIONS})")
+    if sc.action in ("heal", "up") and chain is not None:
+        chain.resync()
 
 
 class FaultInjector:
     def __init__(self, fabric: NetFabric,
                  scenarios: Iterable[FaultScenario], *,
                  on_down: Optional[Callable[[str], None]] = None,
-                 on_up: Optional[Callable[[str], None]] = None):
+                 on_up: Optional[Callable[[str], None]] = None,
+                 chain=None):
         self.fabric = fabric
         self.scenarios = tuple(scenarios)
         self.on_down = on_down
         self.on_up = on_up
+        self.chain = chain        # bound late by the orchestrator's _wire
         self._round_fired: set = set()  # scenario indices already applied
 
     def schedule_timed(self) -> None:
@@ -75,4 +100,4 @@ class FaultInjector:
 
     def _apply(self, sc: FaultScenario) -> None:
         apply_scenario(self.fabric, sc, on_down=self.on_down,
-                       on_up=self.on_up)
+                       on_up=self.on_up, chain=self.chain)

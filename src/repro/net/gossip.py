@@ -80,7 +80,12 @@ class GossipReplicator:
         if src_node is None:
             return
         chain = self._base_chain(src_node, base_cid) if base_cid else []
-        for peer_id in self.fabric.nearest(owner, self.factor):
+        # replicate only onto store nodes: the fabric also carries store-less
+        # chain participants (the engine's 'orchestrator' replica)
+        storeless = tuple(n for n in self.fabric.nodes
+                          if n not in self.network.nodes)
+        for peer_id in self.fabric.nearest(owner, self.factor,
+                                           exclude=storeless):
             peer = self.network.nodes.get(peer_id)
             if peer is None:
                 self.stats["skipped"] += 1

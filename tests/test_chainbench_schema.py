@@ -1,0 +1,68 @@
+"""benchmarks/chainbench.py --quick inside the tier-1 budget: the BENCH_chain
+artifact keeps its schema and the acceptance invariants stay machine-checked
+(replicas converge with identical contract state in every scenario, WAN
+finality costs more than LAN, the sealer partition forks and heals, the
+equivocating sealer is detected)."""
+import json
+
+import pytest
+
+chainbench = pytest.importorskip("benchmarks.chainbench",
+                                 reason="benchmarks/ needs repo-root cwd")
+
+ROW_KEYS = {"blocks_sealed", "forks_observed", "reorgs", "max_reorg_depth",
+            "reverts", "equivocations_seen", "chain_bytes", "undeliverable",
+            "catchup_blocks", "heads_converged", "state_digests_equal",
+            "verified", "tx_finality_s", "wall_clock_s"}
+
+
+@pytest.fixture(scope="module")
+def bench(tmp_path_factory):
+    out_path = tmp_path_factory.mktemp("bench") / "BENCH_chain.json"
+    result = chainbench.main(quick=True, out_path=str(out_path))
+    return result, json.loads(out_path.read_text())
+
+
+def test_bench_chain_schema(bench):
+    result, written = bench
+    assert written == json.loads(json.dumps(result))  # artifact == return
+    assert written["quick"] is True
+    assert set(written) == {"quick", "config", "scenarios", "partition",
+                            "byzantine"}
+    expected = {"sync_lan", "sync_wan-heterogeneous", "async_lan",
+                "async_wan-heterogeneous"}
+    assert set(written["scenarios"]) == expected
+    for name, row in written["scenarios"].items():
+        assert ROW_KEYS <= set(row), name
+        assert row["blocks_sealed"] > 0
+        assert row["wall_clock_s"] > 0
+        fin = row["tx_finality_s"]
+        assert {"n", "mean", "p95", "max"} <= set(fin)
+        assert fin["n"] > 0 and fin["mean"] > 0
+        assert fin["max"] >= fin["p95"] >= 0
+    assert ROW_KEYS <= set(written["partition"])
+    assert "rounds_completed" in written["partition"]
+    assert "equivocations_sent" in written["byzantine"]
+
+
+def test_bench_chain_acceptance(bench):
+    _, written = bench
+    # every scenario converges: one head, byte-identical contract state,
+    # all replicas' chains verify
+    rows = list(written["scenarios"].values()) + [written["partition"],
+                                                  written["byzantine"]]
+    for row in rows:
+        assert row["heads_converged"]
+        assert row["state_digests_equal"]
+        assert row["verified"]
+    # consensus over a WAN costs real finality latency vs a LAN
+    assert written["scenarios"]["sync_wan-heterogeneous"]["tx_finality_s"]["mean"] > \
+        written["scenarios"]["sync_lan"]["tx_finality_s"]["mean"]
+    # the sealer partition forked both sides and still completed the run
+    assert written["partition"]["forks_observed"] >= 1
+    assert written["partition"]["max_reorg_depth"] >= 1
+    assert written["partition"]["undeliverable"] >= 1
+    assert written["partition"]["rounds_completed"]
+    # the equivocating sealer was caught by honest replicas
+    assert written["byzantine"]["equivocations_sent"] >= 1
+    assert written["byzantine"]["equivocations_seen"] >= 1

@@ -98,6 +98,67 @@ def test_scorer_reassignment_on_failure():
     assert repl in c.models["m0"].assigned
 
 
+def test_deadline_reassignment_and_late_score_disregarded():
+    """Paper §3.2 failure handling: a scorer that misses its heartbeat
+    deadline gets its assignment resampled, and its late submitScore is
+    disregarded (returned False, not recorded — not a revert)."""
+    led, c = _setup(n=6)                      # heartbeats land at t=0
+    led.submit("orchestrator", "start_training", logical_time=0.0)
+    led.submit("s0", "submit_model", cid="m0", logical_time=0.0)
+    assign = led.submit("orchestrator", "start_scoring", logical_time=0.0)
+    stale = assign["m0"][0]
+    for s in sorted(c.aggregators):
+        if s != stale:                        # everyone else stays alive
+            led.submit(s, "heartbeat", logical_time=10.0)
+    out = led.submit("orchestrator", "reassign_stale", deadline_s=5.0,
+                     logical_time=10.0)
+    assert [d["dead"] for d in out] == [stale]
+    entry = c.models["m0"]
+    assert stale not in entry.assigned and stale in entry.replaced
+    repl = out[0]["new"]
+    assert repl in entry.assigned and repl != stale
+    # the stale scorer's late score is disregarded, silently
+    ok = led.submit(stale, "submit_score", cid="m0", score=0.9,
+                    logical_time=11.0)
+    assert ok is False
+    assert stale not in entry.scores
+    # the replacement's score is accepted
+    ok = led.submit(repl, "submit_score", cid="m0", score=0.5,
+                    logical_time=11.0)
+    assert ok is True and entry.scores[repl] == 0.5
+
+
+def test_out_of_order_score_buffers_until_assignment():
+    """Fork merges can re-seal a score ahead of its model: the contract
+    buffers it deterministically and drains it once the model is assigned."""
+    led, c = _setup(n=4)
+    led.submit("orchestrator", "start_training")
+    ok = led.submit("s1", "submit_score", cid="m0", score=0.7)
+    assert ok is False and c.pending_scores == {"m0": {"s1": 0.7}}
+    led.submit("s0", "submit_model", cid="m0")
+    led.submit("orchestrator", "start_scoring")
+    entry = c.models["m0"]
+    assert not c.pending_scores                  # drained
+    if "s1" in entry.assigned:                   # accepted iff assigned
+        assert entry.scores.get("s1") == 0.7
+    else:
+        assert "s1" not in entry.scores
+
+
+def test_state_digest_and_reset_are_replay_exact():
+    led, c = _setup(n=4)
+    led.submit("orchestrator", "start_training")
+    led.submit("s0", "submit_model", cid="m0")
+    led.submit("orchestrator", "start_scoring")
+    d1 = c.state_digest()
+    # replaying the same chain into a reset contract reproduces the digest
+    c2 = UnifyFLContract("sync")
+    led.replay_into(c2)
+    assert c2.state_digest() == d1
+    c2.reset()
+    assert c2.state_digest() == UnifyFLContract("sync").state_digest()
+
+
 def test_elastic_membership():
     led, c = _setup(n=3)
     led.submit("s3", "register")

@@ -1,4 +1,7 @@
-"""PoA ledger: hash chain, sealer rotation, persistence/replay, randomness."""
+"""PoA ledger: hash chain, sealer rotation, persistence/replay, randomness,
+and the audit paths — a corrupt or missing on-disk record must stop replay
+at the break, and verify() must reject tampered history."""
+import json
 import os
 
 import pytest
@@ -46,6 +49,87 @@ def test_persistence_and_replay(tmp_path):
     led2.replay_into(c2)
     assert c2.round == 1
     assert c2.latest_by_owner.get("a") == "bafyX"
+
+
+def _seed_chain(path, n=5):
+    led = Ledger(["a", "b"], path=path)
+    c = UnifyFLContract("sync")
+    led.attach_contract(c)
+    led.submit("a", "register")
+    led.submit("b", "register")
+    for i in range(n - 2):
+        led.submit("a", "heartbeat")
+    assert led.height == n
+    return led
+
+
+def test_replay_stops_at_corrupt_block_hash(tmp_path):
+    """A record whose stored hash doesn't match its content ends the replay
+    right there: the intact prefix loads, nothing after it does."""
+    path = str(tmp_path / "chain.jsonl")
+    _seed_chain(path, n=5)
+    lines = open(path).read().splitlines()
+    rec = json.loads(lines[2])
+    rec["txs"][0]["args"]["evil"] = True      # content no longer matches hash
+    lines[2] = json.dumps(rec)
+    open(path, "w").write("\n".join(lines) + "\n")
+
+    led2 = Ledger(["a", "b"], path=path)
+    assert led2.height == 2                   # stopped at the break
+    assert led2.replay_stopped_at == 2
+    assert led2.verify()                      # the loaded prefix is intact
+    c2 = UnifyFLContract("sync")
+    led2.replay_into(c2)
+    assert c2.aggregators == {"a", "b"}       # prefix state only
+
+
+def test_replay_stops_at_dropped_mid_chain_block(tmp_path):
+    """Deleting a mid-chain record breaks the prev-hash linkage: replay keeps
+    only the blocks before the gap."""
+    path = str(tmp_path / "chain.jsonl")
+    _seed_chain(path, n=5)
+    lines = open(path).read().splitlines()
+    del lines[1]                              # drop block height 1
+    open(path, "w").write("\n".join(lines) + "\n")
+
+    led2 = Ledger(["a", "b"], path=path)
+    assert led2.height == 1
+    assert led2.replay_stopped_at == 1
+    assert led2.verify()
+
+
+def test_replay_survives_torn_final_line(tmp_path):
+    """A crash mid-append leaves a partially-written last record: replay
+    treats it as the break (prefix loads, suffix rotates to .corrupt)."""
+    path = str(tmp_path / "chain.jsonl")
+    _seed_chain(path, n=4)
+    data = open(path).read().splitlines()
+    torn = data[3][:len(data[3]) // 2]          # half a JSON record
+    open(path, "w").write("\n".join(data[:3] + [torn]) + "\n")
+
+    led2 = Ledger(["a", "b"], path=path)
+    assert led2.height == 3
+    assert led2.replay_stopped_at == 3
+    assert led2.verify()
+    assert torn in open(path + ".corrupt").read()
+    # the recovered file appends cleanly: a new block lands at height 3
+    c2 = UnifyFLContract("sync")
+    led2.attach_contract(c2)
+    led2.replay_into(c2)
+    led2.submit("a", "heartbeat")
+    led3 = Ledger(["a", "b"], path=path)
+    assert led3.height == 4 and led3.replay_stopped_at is None
+
+
+def test_verify_rejects_post_load_tamper(tmp_path):
+    """verify() re-audits the whole chain: in-memory mutation of a replayed
+    block is caught even though the disk file was intact."""
+    path = str(tmp_path / "chain.jsonl")
+    _seed_chain(path, n=4)
+    led2 = Ledger(["a", "b"], path=path)
+    assert led2.verify()
+    led2.blocks[1].txs[0].args["evil"] = True
+    assert not led2.verify()
 
 
 def test_block_randomness_deterministic():

@@ -51,10 +51,13 @@ def test_bench_net_schema(bench):
 
 def test_bench_net_acceptance(bench):
     _, written = bench
-    # WAN transfers cost simulated time that lan barely pays
+    # WAN transfers occupy link time that lan barely pays. (Total fabric
+    # busy time, not demand fetch_time: with the replicated chain's barrier
+    # delaying scoring dispatch, the prefetcher can warm every pull before
+    # a demand fetch happens — fetch_time 0 is the prefetcher succeeding.)
     scen = written["scenarios"]
-    assert scen["sync_wan-heterogeneous"]["store"]["fetch_time"] > \
-        scen["sync_lan"]["store"]["fetch_time"]
+    assert scen["sync_wan-heterogeneous"]["net"]["busy_s"] > \
+        scen["sync_lan"]["net"]["busy_s"]
     # async + prefetch beats async without prefetch under wan-heterogeneous
     assert written["async_prefetch_speedup"] > 1.0
     assert written["prefetch_hit_rate"] > 0

@@ -191,6 +191,30 @@ def test_unknown_wire_version_rejected():
         node.get_decoded(cid, node.wire_decoder())
 
 
+def test_keyframe_bounds_delta_chain_walk():
+    """Long-chain compaction: with ``FedConfig.keyframe_every = k`` every
+    k-th announced envelope ships whole (int8 keyframe), so a late joiner /
+    post-reorg catch-up never walks more than k-1 delta links."""
+    from repro.config import FedConfig
+    from repro.configs import get_config
+    from repro.core.builder import build_image_experiment
+
+    fed = FedConfig(n_silos=2, clients_per_silo=1, rounds=4, local_epochs=1,
+                    mode="sync", scorer="accuracy", agg_policy="all",
+                    score_policy="median", compression="int8-delta",
+                    keyframe_every=2)
+    orch = build_image_experiment(get_config("paper-cnn"), fed, n_train=200,
+                                  n_test=80, seed=0)
+    orch.run(4)
+    depths = []
+    for s in orch.silos:
+        assert s._announces == 4
+        for cid in list(s.store._blocks):
+            depths.append(wire.chain_depth_of(s.store, cid))
+    assert max(depths) <= fed.keyframe_every - 1     # walk bound holds
+    assert any(d == 1 for d in depths)               # and deltas do exist
+
+
 def test_grep_gate_method_key_only_in_wire():
     """Acceptance: the '__method__' envelope key appears in exactly one
     module under src/ — repro/core/wire.py (the legacy-decode shim)."""
