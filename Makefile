@@ -3,7 +3,7 @@
 PYTHON ?= python
 PYTEST_ARGS ?=
 
-.PHONY: verify netbench kernelbench scorebench chainbench
+.PHONY: verify netbench kernelbench scorebench chainbench recoverybench
 
 verify:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q $(PYTEST_ARGS)
@@ -19,3 +19,6 @@ scorebench:
 
 chainbench:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.chainbench --quick
+
+recoverybench:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.recoverybench --quick

@@ -8,10 +8,12 @@ converges through heaviest-chain fork choice + deterministic contract
 re-execution — so partitions fork the chain, heals trigger reorgs, and
 byzantine sealers can equivocate.
 
-replica    -- per-silo block tree, mempool, canonical-head maintenance
+replica    -- per-silo block tree, mempool, canonical-head maintenance,
+              per-replica WAL segment + snapshot/recover (crash durability)
 sealer     -- Clique sealing schedule (in-turn difficulty 2 / out-of-turn 1)
 forkchoice -- heaviest chain, deterministic tie-break (smallest head hash)
-sync       -- block broadcast + orphan catch-up + heal resync on the fabric
+sync       -- block broadcast + locator catch-up + heal/restart resync on
+              the fabric; kill/restart replica lifecycle
 adapter    -- re-executable contract execution; LedgerView (the Ledger API
               bound to one replica: submit-via-local, read-your-replica)
 """
@@ -20,11 +22,14 @@ from repro.chain.forkchoice import better, common_ancestor, total_difficulty
 from repro.chain.sealer import (DIFF_IN_TURN, DIFF_OUT_OF_TURN, difficulty,
                                 equivocating_twin, in_turn_sealer,
                                 validate_seal)
-from repro.chain.replica import GENESIS, Block, ChainReplica, Tx
+from repro.chain.replica import (GENESIS, WAL_FORMAT_VERSION, Block,
+                                 ChainReplica, ReplicaSnapshot, Tx,
+                                 load_snapshot)
 from repro.chain.sync import ChainNetwork
 
 __all__ = ["ChainNetwork", "ChainReplica", "LedgerView", "ContractExecutor",
-           "Block", "Tx", "GENESIS", "better", "common_ancestor",
+           "Block", "Tx", "GENESIS", "ReplicaSnapshot", "load_snapshot",
+           "WAL_FORMAT_VERSION", "better", "common_ancestor",
            "total_difficulty", "difficulty", "in_turn_sealer",
            "validate_seal", "equivocating_twin", "DIFF_IN_TURN",
            "DIFF_OUT_OF_TURN"]

@@ -72,6 +72,14 @@ class ContractExecutor:
                     self.on_exec(tx.txid)
         return reverts
 
+    def reset(self) -> None:
+        """Forget everything (process kill): contract back to genesis state,
+        emit-once guards and cached tx results dropped. The next replay —
+        from disk or from peers — re-emits events exactly once."""
+        self.contract.reset()
+        self._seen.clear()
+        self.last_results.clear()
+
     def rebuild(self, chain) -> int:
         """Re-execute a whole canonical chain into a reset contract (the
         reorg path); emit-once guards keep already-delivered events quiet."""

@@ -23,17 +23,42 @@ dissemination (``sync.py``).
 ``solo=True`` is single-replica mode (the ``core.ledger.Ledger`` facade): one
 process impersonates the whole committee, sealing every height as the
 in-turn sealer. That reproduces the pre-chain Ledger behaviour bit-for-bit.
+
+**Durability.** Each replica may carry a ``segment_path``: a per-replica
+JSONL write-ahead segment that every stored block (sealed or imported)
+appends to as it lands. A crash (``wipe()`` — all in-memory state drops)
+recovers by ``replay_wal()``: the segment replays in arrival order — parents
+always precede children on disk, so every record imports as a clean tree
+insert — auditing hashes/seals as it loads and *stopping at the first
+break* (torn final record from a crash mid-append, corrupt or missing
+record). The broken suffix rotates to ``<path>.corrupt`` and the file is
+truncated to the valid prefix, so post-recovery appends extend a well-formed
+segment. Disk replay costs ZERO fabric bytes; only the gap sealed while the
+process was dead is fetched from peers (``sync.ChainNetwork.restart``).
+
+``snapshot()`` captures the full replica state (block tree + mempool + head
++ contract state, keyed by ``contract.state_digest()``) as a frozen
+dataclass; ``restore_snapshot`` + ``replay_wal(skip=snap.wal_count)`` is
+byte-identical to a genesis replay of the whole segment.
+
+On-disk format: v2 (block hashes cover difficulty/salt/txid — a pre-chain
+v1 file fails the hash audit at its first record and rotates to
+``.corrupt`` wholesale).
 """
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 import json
+import os
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Set, Tuple
 
 from repro.chain import forkchoice, sealer as sealing
 from repro.chain.forkchoice import GENESIS
+
+WAL_FORMAT_VERSION = 2   # block hashes cover difficulty/salt/txid
 
 
 @dataclass
@@ -83,11 +108,58 @@ class Block:
         """Wire size of this block (charged on fabric links by sync.py)."""
         return len(json.dumps(self.to_json()))
 
+    @classmethod
+    def from_json(cls, rec: Dict) -> "Block":
+        """Parse one WAL/wire record; raises KeyError/TypeError/ValueError on
+        malformed input (a torn record from a crash mid-append)."""
+        txs = [Tx(t["sender"], t["method"], t["args"],
+                  t.get("nonce", 0), t.get("txid", ""))
+               for t in rec["txs"]]
+        return cls(rec["height"], rec["prev"], rec["sealer"], txs,
+                   rec["time"], rec.get("difficulty", 2),
+                   rec.get("salt", 0), rec["hash"])
+
+
+@dataclass(frozen=True)
+class ReplicaSnapshot:
+    """Frozen full-state snapshot of one replica (deterministic restart).
+
+    ``state_digest`` is the key: a replica restored from this snapshot plus
+    the WAL suffix past ``wal_count`` is byte-identical (same digest) to one
+    that replayed its whole segment from genesis. Blocks are stored in
+    insertion order (parents before children), so restore is a straight
+    tree rebuild with no orphan pool."""
+    node_id: str
+    state_digest: str            # contract.state_digest() at capture
+    head: str
+    seq: int
+    wal_count: int               # WAL records this snapshot covers
+    blocks: Tuple[str, ...]      # full block tree, JSON, insertion order
+    mempool: Tuple[str, ...]     # pending txs, JSON, submission order
+    my_txs: Tuple[str, ...]      # locally-submitted txs (reorg resurrection)
+    onchain: Tuple[str, ...]     # txids on the canonical chain
+    seen: Tuple[str, ...]        # executor emit-once guard
+    contract_state: str          # canonical JSON of full contract state
+    format_version: int = WAL_FORMAT_VERSION
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(dataclasses.asdict(self), f, sort_keys=True)
+
+
+def load_snapshot(path: str) -> ReplicaSnapshot:
+    with open(path) as f:
+        raw = json.load(f)
+    for k in ("blocks", "mempool", "my_txs", "onchain", "seen"):
+        raw[k] = tuple(raw[k])
+    return ReplicaSnapshot(**raw)
+
 
 class ChainReplica:
     def __init__(self, node_id: str, sealers: List[str], *,
                  executor=None, solo: bool = False,
-                 byzantine: Optional[str] = None):
+                 byzantine: Optional[str] = None,
+                 segment_path: Optional[str] = None):
         if not sealers:
             raise ValueError("need at least one PoA sealer")
         self.node_id = node_id
@@ -95,6 +167,21 @@ class ChainReplica:
         self.executor = executor
         self.solo = solo
         self.byzantine = byzantine
+        self.segment_path = segment_path
+        # height of the first broken record hit during replay (None = intact)
+        self.wal_stopped_at: Optional[int] = None
+        self._replaying = False      # suppress WAL appends during replay
+        self._wal_records = 0        # valid records currently in the segment
+        self.stats = {"txs": 0, "blocks": 0, "bytes": 0, "blocks_sealed": 0,
+                      "blocks_imported": 0, "forks_observed": 0, "reorgs": 0,
+                      "max_reorg_depth": 0, "equivocations_seen": 0,
+                      "orphans": 0, "invalid": 0, "reverts": 0,
+                      "wal_blocks": 0, "wal_replayed": 0,
+                      "wal_replay_bytes": 0}
+        self._init_memory()
+
+    def _init_memory(self) -> None:
+        """(Re)initialize every piece of in-memory chain state."""
         self.blocks: Dict[str, Block] = {}
         self.head = GENESIS
         self._td: Dict[str, int] = {GENESIS: 0}
@@ -106,10 +193,6 @@ class ChainReplica:
         self._sealed_at: Dict[Tuple[str, int], str] = {}
         self._at_height: Dict[int, int] = {}     # blocks held per height
         self._seq = 0
-        self.stats = {"txs": 0, "blocks": 0, "bytes": 0, "blocks_sealed": 0,
-                      "blocks_imported": 0, "forks_observed": 0, "reorgs": 0,
-                      "max_reorg_depth": 0, "equivocations_seen": 0,
-                      "orphans": 0, "invalid": 0, "reverts": 0}
 
     # -- chain reads --------------------------------------------------------- #
     @property
@@ -221,6 +304,13 @@ class ChainReplica:
         self._td[blk.hash] = self._td[blk.prev_hash] + blk.difficulty
         self._height[blk.hash] = blk.height
         self.stats["blocks"] += 1
+        self._wal_append(blk)
+        # never reuse a txid: any own-origin tx (disk replay, peer catch-up
+        # after a kill wiped the counter) advances the sequence
+        own = f"{self.node_id}:"
+        for t in blk.txs:
+            if t.txid.startswith(own):
+                self._seq = max(self._seq, t.nonce)
         # a second block at an occupied height is an observed fork (the
         # status codes don't measure this: catch-up ancestor imports are
         # "side" without being new forks)
@@ -293,3 +383,153 @@ class ChainReplica:
     def _exec(self, blk: Block) -> None:
         if self.executor is not None:
             self.stats["reverts"] += self.executor.execute_block(blk)
+
+    # -- durability: write-ahead segment -------------------------------------- #
+    def _wal_append(self, blk: Block) -> None:
+        """Append one stored block to the per-replica segment. Called from
+        ``_insert`` so *every* block that enters the tree — sealed locally or
+        imported from a peer — persists in arrival order (parents always
+        precede children: ``_connect`` only inserts connected blocks)."""
+        if self.segment_path is None or self._replaying:
+            return
+        line = json.dumps(blk.to_json()) + "\n"
+        with open(self.segment_path, "a") as f:
+            f.write(line)
+        self._wal_records += 1
+        self.stats["wal_blocks"] += 1
+        self.stats["bytes"] += len(line)
+
+    def replay_wal(self, *, skip: int = 0) -> int:
+        """Replay the on-disk segment into the (empty or snapshot-restored)
+        in-memory tree, through the executor when one is attached. Pure
+        local disk I/O — charged ZERO fabric bytes; peer catch-up pays only
+        for the gap sealed while this process was dead.
+
+        Audits as it loads: a record that is torn (crash mid-append),
+        fails its hash/seal audit, or doesn't connect to the tree ends the
+        replay *there* — the intact prefix loads, the broken suffix rotates
+        to ``<segment_path>.corrupt`` (preserved, never deleted) and the
+        file truncates to the valid prefix so later appends extend a
+        well-formed segment. ``skip`` resumes past the records a snapshot
+        already covers. Returns the number of blocks imported."""
+        if not self.segment_path or not os.path.exists(self.segment_path):
+            return 0
+        self.wal_stopped_at = None
+        imported, valid_bytes = 0, 0
+        self._replaying = True
+        self._wal_records = 0
+        try:
+            with open(self.segment_path, "rb") as f:
+                for i, raw in enumerate(f):
+                    if i < skip:
+                        valid_bytes += len(raw)
+                        self._wal_records += 1
+                        continue
+                    try:
+                        blk = Block.from_json(json.loads(raw.decode()))
+                    except (ValueError, KeyError, TypeError,
+                            UnicodeDecodeError):
+                        self.wal_stopped_at = self.height
+                        break
+                    status = self.import_block(blk)
+                    if status in ("invalid", "orphan"):
+                        # failed audit / broken linkage: the break is here
+                        self.wal_stopped_at = self.height
+                        break
+                    valid_bytes += len(raw)
+                    self._wal_records += 1
+                    if status != "known":
+                        imported += 1
+                        self.stats["wal_replay_bytes"] += len(raw)
+        finally:
+            self._replaying = False
+        if self.wal_stopped_at is not None:
+            self._rotate_corrupt(valid_bytes)
+        self.stats["wal_replayed"] += imported
+        return imported
+
+    def _rotate_corrupt(self, valid_bytes: int) -> None:
+        """Corrupt-suffix rotation: the suffix past the last valid record
+        moves to ``<path>.corrupt`` (appended, preserved) and the segment
+        truncates to the intact prefix."""
+        with open(self.segment_path, "rb") as f:
+            data = f.read()
+        with open(self.segment_path + ".corrupt", "ab") as f:
+            f.write(data[valid_bytes:])
+        with open(self.segment_path, "wb") as f:
+            f.write(data[:valid_bytes])
+
+    # -- durability: crash / snapshot / recover -------------------------------- #
+    def wipe(self) -> None:
+        """Process kill: ALL in-memory state drops — block tree, mempool,
+        contract state, emit-once guards. The on-disk segment survives;
+        ``recover()`` (disk replay, then peer catch-up) is the way back."""
+        self._init_memory()
+        self.wal_stopped_at = None
+        self._wal_records = 0
+        if self.executor is not None:
+            self.executor.reset()
+
+    def snapshot(self) -> ReplicaSnapshot:
+        """Capture full replica + contract state as a frozen dataclass,
+        keyed by ``contract.state_digest()``."""
+        ex = self.executor
+        contract = ex.contract if ex is not None else None
+        return ReplicaSnapshot(
+            node_id=self.node_id,
+            state_digest=contract.state_digest() if contract is not None
+            else "",
+            head=self.head,
+            seq=self._seq,
+            wal_count=self._wal_records,
+            blocks=tuple(json.dumps(b.to_json(), sort_keys=True)
+                         for b in self.blocks.values()),
+            mempool=tuple(json.dumps(t.to_json(), sort_keys=True)
+                          for t in self.mempool.values()),
+            my_txs=tuple(json.dumps(t.to_json(), sort_keys=True)
+                         for t in self._my_txs.values()),
+            onchain=tuple(sorted(self._onchain)),
+            seen=tuple(sorted(ex._seen)) if ex is not None else (),
+            contract_state=json.dumps(contract.snapshot_state(),
+                                      sort_keys=True)
+            if contract is not None else "")
+
+    def restore_snapshot(self, snap: ReplicaSnapshot) -> None:
+        """Rebuild in-memory state from a snapshot (no re-execution: the
+        contract restores its raw state). Follow with
+        ``replay_wal(skip=snap.wal_count)`` to apply the WAL suffix."""
+        self.wipe()
+        self._replaying = True      # snapshot blocks are already on disk
+        try:
+            for bj in snap.blocks:  # insertion order: parents first
+                self._insert(Block.from_json(json.loads(bj)))
+            self.head = snap.head
+            self._seq = snap.seq
+            for tj in snap.mempool:
+                tx = _tx_from_json(json.loads(tj))
+                self.mempool[tx.txid] = tx
+            for tj in snap.my_txs:
+                tx = _tx_from_json(json.loads(tj))
+                self._my_txs[tx.txid] = tx
+            self._onchain = set(snap.onchain)
+            if self.executor is not None:
+                self.executor._seen = set(snap.seen)
+                if snap.contract_state:
+                    self.executor.contract.restore_state(
+                        json.loads(snap.contract_state))
+        finally:
+            self._replaying = False
+        self._wal_records = snap.wal_count
+
+    def recover(self, snapshot: Optional[ReplicaSnapshot] = None) -> int:
+        """Restart path after ``wipe()``: restore the snapshot when given,
+        then replay the WAL (suffix). Returns blocks replayed from disk."""
+        if snapshot is not None:
+            self.restore_snapshot(snapshot)
+            return self.replay_wal(skip=snapshot.wal_count)
+        return self.replay_wal()
+
+
+def _tx_from_json(rec: Dict) -> Tx:
+    return Tx(rec["sender"], rec["method"], rec["args"],
+              rec.get("nonce", 0), rec.get("txid", ""))

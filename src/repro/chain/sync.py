@@ -19,21 +19,38 @@ small). Orchestration therefore experiences the network for real:
     chain automatically.
 
 ``resync()`` makes every replica announce its head to every peer — wired to
-the fault injector's ``heal``/``up`` actions, it is the "TCP reconnect" that
-turns a healed partition into catch-up traffic and, eventually, one head.
+the fault injector's ``heal``/``up``/``restart`` actions, it is the "TCP
+reconnect" that turns a healed partition into catch-up traffic and,
+eventually, one head.
+
+Catch-up requests carry a **locator** (the requester's canonical-chain
+hashes at exponentially spaced heights, bitcoin-style): the server walks
+ancestors of the orphaned block only until it hits a hash the requester
+already has, so a replica that recovered most of its chain from its local
+WAL segment pays peers only for the *gap* — recovery cost on the wire is
+proportional to what was missed, not to chain length. A requester whose
+chain diverged (fork) misses every locator hash and falls back to the full
+bounded batch, exactly as before.
+
+``kill`` / ``restart`` are the crash-durability hooks (``net.faults``):
+kill drops a replica's entire in-memory state (the WAL segment survives on
+disk), restart replays the segment — charged ZERO fabric bytes — and the
+follow-up ``resync()`` closes the remaining gap as charged transfers.
 
 With ``fabric=None`` delivery is synchronous and free (unit tests /
 single-process replication).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Set, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.chain.adapter import ContractExecutor, LedgerView
-from repro.chain.replica import GENESIS, Block, ChainReplica
+from repro.chain.replica import (GENESIS, Block, ChainReplica,
+                                 ReplicaSnapshot)
 from repro.chain import sealer as sealing
 
 REQUEST_NBYTES = 96          # a catch-up request is one tiny control message
+LOCATOR_HASH_NBYTES = 64     # each locator entry is one hex block hash
 MAX_CATCHUP = 512            # ancestor batch bound per catch-up response
 
 
@@ -50,22 +67,56 @@ class ChainNetwork:
         self.tx_exec_t: Dict[str, Dict[str, float]] = {}
         self.stats = {"broadcasts": 0, "delivered": 0, "undeliverable": 0,
                       "catchup_requests": 0, "catchup_blocks": 0,
-                      "head_announces": 0, "equivocations_sent": 0}
+                      "head_announces": 0, "equivocations_sent": 0,
+                      "kills": 0, "restarts": 0, "wal_replayed": 0,
+                      "restart_fabric_bytes": 0}
 
     # -- membership ---------------------------------------------------------- #
     def add_replica(self, node_id: str, contract, *,
-                    byzantine: Optional[str] = None) -> LedgerView:
+                    byzantine: Optional[str] = None,
+                    segment_path: Optional[str] = None) -> LedgerView:
         ex = ContractExecutor(contract)
         ex.on_exec = lambda txid, nid=node_id: \
             self.tx_exec_t.setdefault(txid, {}).__setitem__(nid, self._now())
         rep = ChainReplica(node_id, self.sealers, executor=ex,
-                           byzantine=byzantine)
+                           byzantine=byzantine, segment_path=segment_path)
+        rep.replay_wal()        # cold start from an existing segment (rejoin)
         self.replicas[node_id] = rep
         if self.fabric is not None:
             self.fabric.register_node(node_id)
         view = LedgerView(self, rep)
         self.views[node_id] = view
         return view
+
+    # -- crash / restart ------------------------------------------------------ #
+    def kill(self, node_id: str) -> None:
+        """Process kill: the replica's entire in-memory state drops (block
+        tree, mempool, contract state, emit-once guards); its WAL segment
+        survives on disk. In-flight transfers touching the node are the
+        fabric's job (``node_down`` cancels them — the ``kill`` fault action
+        does both)."""
+        self.replicas[node_id].wipe()
+        self.stats["kills"] += 1
+        if self.env is not None:
+            self.env.trace.append((self._now(), f"chain:kill:{node_id}"))
+
+    def restart(self, node_id: str, *,
+                snapshot: Optional[ReplicaSnapshot] = None) -> int:
+        """Crash recovery: re-construct the replica from its local WAL
+        segment (snapshot + WAL suffix when a snapshot is supplied) —
+        measured and asserted to charge ZERO fabric bytes — then let the
+        caller ``resync()`` so peers serve the remaining gap as charged
+        catch-up transfers. Returns blocks replayed from disk."""
+        bytes_before = self.fabric.stats["bytes"] if self.fabric else 0
+        n = self.replicas[node_id].recover(snapshot=snapshot)
+        self.stats["restarts"] += 1
+        self.stats["wal_replayed"] += n
+        self.stats["restart_fabric_bytes"] += \
+            (self.fabric.stats["bytes"] if self.fabric else 0) - bytes_before
+        if self.env is not None:
+            self.env.trace.append(
+                (self._now(), f"chain:restart:{node_id}:wal={n}"))
+        return n
 
     def _now(self) -> float:
         return self.env.now if self.env is not None else 0.0
@@ -115,9 +166,15 @@ class ChainNetwork:
             self.stats["undeliverable"] += 1
 
     def _send_block(self, src: str, dst: str, blk: Block) -> None:
+        key = ("chain", src, dst, blk.hash)
+        if self.fabric is not None and self.fabric.in_flight(key):
+            # this exact block is already on the wire to dst: SimEnv keys
+            # hold ONE live event (cancel-and-replace), so re-sending would
+            # charge the lane again and deliver *later* than the transfer it
+            # replaced
+            return
         self._transfer(src, dst, f"blk:{blk.hash[:12]}", blk.nbytes(),
-                       lambda: self._deliver(dst, src, blk),
-                       ("chain", src, dst, blk.hash))
+                       lambda: self._deliver(dst, src, blk), key)
 
     def _deliver(self, dst: str, src: str, blk: Block) -> None:
         rep = self.replicas.get(dst)
@@ -152,21 +209,46 @@ class ChainNetwork:
         self._send_block(dst, src, rep.blocks[rep.head])
 
     # -- catch-up ------------------------------------------------------------- #
+    def _locator(self, node_id: str) -> List[str]:
+        """The requester's canonical-chain hashes at exponentially spaced
+        heights below its head (dense for the most recent 8): the catch-up
+        server stops at the first hash the requester already has, so the
+        response covers the *gap*, not the whole chain."""
+        rep = self.replicas[node_id]
+        chain = rep.canonical()
+        out: List[str] = []
+        i, step = len(chain) - 1, 1
+        while i >= 0:
+            out.append(chain[i].hash)
+            i -= step
+            if len(out) >= 8:
+                step *= 2
+        return out
+
     def _request_catchup(self, dst: str, src: str, blk: Block) -> None:
         self.stats["catchup_requests"] += 1
-        self._transfer(dst, src, f"req:{blk.hash[:12]}", REQUEST_NBYTES,
-                       lambda: self._serve_catchup(src, dst, blk),
+        locator = self._locator(dst)
+        nbytes = REQUEST_NBYTES + LOCATOR_HASH_NBYTES * len(locator)
+        self._transfer(dst, src, f"req:{blk.hash[:12]}", nbytes,
+                       lambda: self._serve_catchup(src, dst, blk, locator),
                        ("chainreq", src, dst, blk.hash))
 
-    def _serve_catchup(self, src: str, dst: str, blk: Block) -> None:
+    def _serve_catchup(self, src: str, dst: str, blk: Block,
+                       locator: Sequence[str] = ()) -> None:
         """``src`` answers with the ancestors of the orphaned block it holds
-        (oldest first, bounded); the orphan pool connects them on arrival."""
+        (oldest first, bounded), stopping early at any locator hash the
+        requester advertised — a WAL-recovered replica is served only the
+        blocks sealed while it was down. A diverged requester (fork) misses
+        every locator hash until the common prefix and gets the full
+        bounded batch; the orphan pool connects it on arrival."""
         rep = self.replicas.get(src)
         if rep is None:
             return
+        have = set(locator)
         batch: List[Block] = []
         cur = blk.prev_hash
-        while cur != GENESIS and cur in rep.blocks and len(batch) < MAX_CATCHUP:
+        while cur != GENESIS and cur in rep.blocks and cur not in have \
+                and len(batch) < MAX_CATCHUP:
             batch.append(rep.blocks[cur])
             cur = rep.blocks[cur].prev_hash
         if not batch:

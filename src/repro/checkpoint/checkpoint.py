@@ -33,16 +33,29 @@ def load_manifest(store: StoreNode, manifest_cid: str) -> Dict:
 
 
 def restore_state(store: StoreNode, manifest_cid: str, like):
-    """Rebuild the state pytree (shape/dtype cast to the prototype)."""
+    """Rebuild the state pytree (shape/dtype cast to the prototype).
+
+    A stored leaf whose element count doesn't match the prototype raises
+    ``ValueError`` naming the leaf (flat index + store key) and both shapes —
+    a silent elementwise reshape error here would point at numpy internals,
+    not at which checkpoint leaf diverged from the model config."""
     manifest = load_manifest(store, manifest_cid)
     flat = store.get(manifest["state_cid"])
     leaves, treedef = jax.tree_util.tree_flatten(like)
     vals = list(flat.values())
+    keys = list(flat.keys())
     if len(vals) != len(leaves):
         raise ValueError(
             f"checkpoint/prototype mismatch: {len(vals)} vs {len(leaves)} leaves")
-    cast = [np.asarray(v).astype(l.dtype).reshape(np.shape(l))
-            for v, l in zip(vals, leaves)]
+    cast = []
+    for i, (v, l) in enumerate(zip(vals, leaves)):
+        arr = np.asarray(v)
+        want = tuple(np.shape(l))
+        if arr.size != int(np.prod(want, dtype=np.int64)):
+            raise ValueError(
+                f"checkpoint shape mismatch at leaf {i} ({keys[i]!r}): "
+                f"stored {arr.shape} cannot reshape to prototype {want}")
+        cast.append(arr.astype(l.dtype).reshape(want))
     return jax.tree_util.tree_unflatten(treedef, cast), manifest
 
 

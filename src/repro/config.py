@@ -225,6 +225,9 @@ SCORERS = ("accuracy", "multikrum", "loss")
 
 NET_PRESETS = ("lan", "wan-uniform", "wan-heterogeneous", "paper-testbed")
 
+FAULT_ACTIONS = ("down", "up", "isolate", "heal", "slow_link", "partition",
+                 "byzantine_sealer", "kill", "restart")
+
 
 @dataclass(frozen=True)
 class FaultScenario:
@@ -239,14 +242,25 @@ class FaultScenario:
     member lists; unlisted nodes — including the engine's ``orchestrator``
     chain replica — join group 0; both sides keep sealing, so the chain
     forks), ``byzantine_sealer`` (the named silo's sealer starts
-    equivocating — two blocks per height, different halves of the swarm)."""
-    action: str                  # see Actions above
+    equivocating — two blocks per height, different halves of the swarm),
+    ``kill`` (process crash: node down + the replica's entire in-memory
+    state — chain, mempool, contract — dropped), ``restart`` (the killed
+    node comes back, replays its WAL segment from disk, then closes any
+    remaining gap from peers).
+
+    Unknown actions fail here, at construction — not rounds into a run."""
+    action: str                  # one of FAULT_ACTIONS
     node: str = ""
     node_b: str = ""             # second endpoint / second partition group
     factor: float = 1.0          # bandwidth divisor for 'slow_link'
     round: int = 0               # sync-engine round trigger (ignored if < 1)
     when: str = "train"          # 'train' (round start) | 'score' (pre-scoring)
     at_time: float = -1.0        # absolute sim-time trigger (ignored if < 0)
+
+    def __post_init__(self):
+        if self.action not in FAULT_ACTIONS:
+            raise ValueError(f"unknown fault action {self.action!r} "
+                             f"(choose from {FAULT_ACTIONS})")
 
 
 @dataclass(frozen=True)
@@ -262,6 +276,9 @@ class NetConfig:
     replication_factor: int = 1        # gossip replicas per announced CID
     prefetch: bool = True              # warm decoded caches during training
     prefetch_delay_s: float = 0.0      # lag between announce and prefetch pull
+    # directory for per-replica WAL segments (<wal_dir>/<node>.jsonl);
+    # "" = in-memory replicas only ('restart' then recovers purely from peers)
+    wal_dir: str = ""
     scenarios: Tuple[FaultScenario, ...] = ()
 
 

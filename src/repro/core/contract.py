@@ -100,6 +100,59 @@ class UnifyFLContract:
         return hashlib.sha256(
             json.dumps(body, sort_keys=True).encode()).hexdigest()
 
+    # -- snapshot / restore (crash-restart durability) -------------------- #
+    def snapshot_state(self) -> Dict:
+        """Deep JSON-able copy of the FULL contract state — a superset of
+        ``state_digest``'s body (adds the execution log and preserves
+        insertion order everywhere it matters for later execution). Feeding
+        it back through ``restore_state`` reproduces the digest byte for
+        byte."""
+        return {
+            "mode": self.mode, "round": self.round, "phase": self.phase,
+            "aggregators": sorted(self.aggregators),
+            "busy": sorted(self.busy),
+            "heartbeats": dict(self.heartbeats),
+            "latest_by_owner": dict(self.latest_by_owner),
+            "deferred": [dict(d) for d in self.deferred],
+            "pending_scores": {cid: dict(sc)
+                               for cid, sc in self.pending_scores.items()},
+            "models": {cid: {"owner": e.owner, "round": e.round,
+                             "scores": dict(e.scores),
+                             "assigned": list(e.assigned),
+                             "replaced": sorted(e.replaced),
+                             "finalized": e.finalized}
+                       for cid, e in self.models.items()},
+            "log": [dict(r) for r in self.log],
+        }
+
+    def restore_state(self, state: Dict) -> None:
+        """Inverse of ``snapshot_state``, in place (references held by
+        runtimes survive, like ``reset``). No re-execution happens — this
+        is the raw-state restore path a snapshot restart uses instead of
+        replaying the chain from genesis."""
+        emit = self._emit
+        self.__init__(state["mode"])
+        self._emit = emit
+        self.round = int(state["round"])
+        self.phase = state["phase"]
+        self.aggregators = set(state["aggregators"])
+        self.busy = set(state["busy"])
+        self.heartbeats = {k: float(v)
+                           for k, v in state["heartbeats"].items()}
+        self.latest_by_owner = dict(state["latest_by_owner"])
+        self.deferred = [dict(d) for d in state["deferred"]]
+        self.pending_scores = {cid: {s: float(v) for s, v in sc.items()}
+                               for cid, sc in state["pending_scores"].items()}
+        self.models = {
+            cid: ModelEntry(cid=cid, owner=e["owner"], round=int(e["round"]),
+                            scores={s: float(v)
+                                    for s, v in e["scores"].items()},
+                            assigned=list(e["assigned"]),
+                            replaced=set(e["replaced"]),
+                            finalized=bool(e["finalized"]))
+            for cid, e in state["models"].items()}
+        self.log = [dict(r) for r in state["log"]]
+
     # ------------------------------------------------------------------ #
     def execute(self, tx, blk) -> Any:
         handler = getattr(self, "tx_" + tx.method, None)

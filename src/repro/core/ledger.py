@@ -13,15 +13,18 @@ direct-ledger tests/benchmarks. The public API is unchanged:
   - blocks are hash-chained and sealed round-robin by the authorized sealer
     set; transactions execute on the attached contract in block order, with
     event emissions delivered to subscribers;
-  - the chain persists as JSONL and replays on restart; ``_replay`` validates
-    linkage + hashes as it loads and *stops at the first break* (a corrupt or
-    missing record cannot smuggle history past the audit);
+  - the chain persists as JSONL and replays on restart — persistence now
+    lives in the replica itself (``ChainReplica.segment_path`` /
+    ``replay_wal``), shared with every replicated-mode replica: replay
+    validates linkage + hashes as it loads and *stops at the first break*,
+    rotating the broken suffix to ``<path>.corrupt`` and truncating the
+    file to the valid prefix (a corrupt or missing record cannot smuggle
+    history past the audit);
   - ``verify()`` re-checks the whole hash chain, seal schedule included;
   - 'on-chain randomness' derives from block hashes.
 """
 from __future__ import annotations
 
-import json
 import os
 import threading
 from typing import Any, Callable, Dict, List, Optional
@@ -40,16 +43,21 @@ class Ledger:
         if not sealers:
             raise ValueError("need at least one PoA sealer")
         self.sealers = list(sealers)
-        self._replica = ChainReplica("ledger", sealers, solo=True)
+        self._replica = ChainReplica("ledger", sealers, solo=True,
+                                     segment_path=path)
         self._subs: List[Callable[[str, Dict], None]] = []
         self._executor: Optional[ContractExecutor] = None
         self.path = path
         self.block_size = block_size
         self._lock = threading.RLock()
-        # height of the first broken record hit during replay (None = intact)
-        self.replay_stopped_at: Optional[int] = None
         if path and os.path.exists(path):
-            self._replay()
+            # tree-only replay (no executor yet): ``replay_into`` re-executes
+            self._replica.replay_wal()
+
+    @property
+    def replay_stopped_at(self) -> Optional[int]:
+        """Height of the first broken on-disk record (None = intact)."""
+        return self._replica.wal_stopped_at
 
     # -- wiring -------------------------------------------------------------- #
     @property
@@ -86,14 +94,13 @@ class Ledger:
 
     def submit(self, sender: str, method: str, logical_time: float = 0.0,
                **args) -> Any:
-        """Submit a tx; seals immediately (Clique period=0). A contract
-        revert raises to the caller — the block still stands (reverted txs
-        are part of history and are skipped deterministically on replay)."""
+        """Submit a tx; seals immediately (Clique period=0) and the sealed
+        block appends to the WAL before control returns. A contract revert
+        raises to the caller — the block still stands (reverted txs are part
+        of history and are skipped deterministically on replay)."""
         with self._lock:
             tx, blk, status, result = self._replica.submit(
                 sender, method, args, logical_time)
-            if blk is not None and self.path:
-                self._persist(blk)
             if status == "revert":
                 raise result
             return result
@@ -101,71 +108,16 @@ class Ledger:
     def seal(self, logical_time: float = 0.0) -> Optional[Block]:
         """Seal any pending txs into a block (no-op when the pool is empty)."""
         with self._lock:
-            blk = self._replica.seal(logical_time)
-            if blk is not None and self.path:
-                self._persist(blk)
-            return blk
+            return self._replica.seal(logical_time)
 
     def block_randomness(self, height: int = -1) -> int:
-        """Deterministic 'on-chain' randomness from a block hash."""
+        """Deterministic 'on-chain randomness' from a block hash."""
         return self._replica.block_randomness(height)
 
     def verify(self) -> bool:
         return self._replica.verify()
 
-    # -- persistence / crash recovery ---------------------------------------- #
-    def _persist(self, blk: Block) -> None:
-        line = json.dumps(blk.to_json()) + "\n"
-        self.stats["bytes"] += len(line)
-        with open(self.path, "a") as f:
-            f.write(line)
-
-    def _replay(self) -> None:
-        """Load the JSONL chain, auditing as we go: a record whose linkage,
-        stored hash, or recomputed hash is wrong ends the replay *there* —
-        the intact prefix loads, the break and everything after it do not.
-        The broken suffix is rotated to ``<path>.corrupt`` (preserved, never
-        deleted) and the file is truncated to the valid prefix, so blocks
-        sealed after the recovery append onto a well-formed chain instead of
-        hiding behind the break. Note: the on-disk format is v2 as of the
-        chain subsystem (block hashes cover difficulty/salt/txid) — a file
-        written by the pre-chain Ledger fails the hash audit at its first
-        record and lands in ``.corrupt`` wholesale."""
-        valid_bytes = 0
-        with open(self.path) as f:
-            for line in f:
-                try:
-                    rec = json.loads(line)
-                    txs = [Tx(t["sender"], t["method"], t["args"],
-                              t.get("nonce", 0), t.get("txid", ""))
-                           for t in rec["txs"]]
-                    blk = Block(rec["height"], rec["prev"], rec["sealer"],
-                                txs, rec["time"], rec.get("difficulty", 2),
-                                rec.get("salt", 0), rec["hash"])
-                except (ValueError, KeyError, TypeError):
-                    # unparseable record — typically a torn final line from
-                    # a crash mid-append: same break semantics as a failed
-                    # audit, the intact prefix survives
-                    self.replay_stopped_at = self._replica.height
-                    break
-                # the replica's own audit is the arbiter: anything but a
-                # clean head extension (bad hash/seal, unknown or non-head
-                # parent, height skip) is the break
-                if self._replica.import_block(blk) != "extended":
-                    self.replay_stopped_at = self._replica.height
-                    break
-                valid_bytes += len(line.encode())
-                self._replica._seq = max(
-                    self._replica._seq,
-                    max((t.nonce for t in txs), default=0))
-        if self.replay_stopped_at is not None:
-            with open(self.path, "rb") as f:
-                data = f.read()
-            with open(self.path + ".corrupt", "ab") as f:
-                f.write(data[valid_bytes:])
-            with open(self.path, "wb") as f:
-                f.write(data[:valid_bytes])
-
+    # -- crash recovery -------------------------------------------------------- #
     def replay_into(self, contract) -> None:
         """Re-execute the whole loaded chain into a fresh contract (restart
         path); reverted txs are skipped deterministically."""

@@ -24,6 +24,7 @@ retries after a short resync delay rather than crashing the engine.
 """
 from __future__ import annotations
 
+import os
 import random
 import time
 from dataclasses import dataclass, field
@@ -340,10 +341,17 @@ def _rebuild_like(like, flat: Dict[str, np.ndarray]):
         return flat
     leaves, treedef = jax.tree_util.tree_flatten(like)
     vals = list(flat.values())
+    keys = list(flat.keys())
     if len(vals) != len(leaves):
         raise ValueError(f"leaf count mismatch {len(vals)} != {len(leaves)}")
-    cast = [np.asarray(v).astype(l.dtype).reshape(l.shape)
-            for v, l in zip(vals, leaves)]
+    cast = []
+    for i, (v, l) in enumerate(zip(vals, leaves)):
+        arr = np.asarray(v)
+        if arr.size != int(np.prod(l.shape, dtype=np.int64)):
+            raise ValueError(
+                f"shape mismatch at leaf {i} ({keys[i]!r}): stored "
+                f"{arr.shape} cannot reshape to expected {tuple(l.shape)}")
+        cast.append(arr.astype(l.dtype).reshape(l.shape))
     return jax.tree_util.tree_unflatten(treedef, cast)
 
 
@@ -365,6 +373,8 @@ class BaseOrchestrator:
         self.prefetcher = None
         self.gossip = None
         self._fault_injector = None
+        # Async sets this to its per-silo loop so a restarted silo resumes
+        self._resume_loop: Optional[Callable[[SiloRuntime], None]] = None
         # per-round marks: {round, silo, t, wan_bytes} — netbench derives
         # per-round WAN byte deltas from these
         self.round_log: List[Dict] = []
@@ -394,8 +404,13 @@ class BaseOrchestrator:
                                          delay_s=net.prefetch_delay_s)
             self.fabric.subscribe(self.prefetcher.on_announce)
         if net.scenarios:
+            # _build_net runs after every add_silo, so the full node set is
+            # known here: a scenario naming an unknown node aborts now, not
+            # rounds into the run
             self._fault_injector = FaultInjector(
-                self.fabric, net.scenarios, on_down=self._silo_net_down)
+                self.fabric, net.scenarios, on_down=self._silo_net_down,
+                on_restart=self._silo_restart,
+                nodes=[s.silo_id for s in self.silos] + [ORCH_NODE])
             self._fault_injector.schedule_timed()
 
     def _silo_net_down(self, node_id: str):
@@ -403,6 +418,18 @@ class BaseOrchestrator:
         for s in self.silos:
             if s.silo_id == node_id:
                 s.fail()
+
+    def _silo_restart(self, node_id: str):
+        """A killed silo comes back: its chain replica has already recovered
+        (WAL replay + peer resync, handled by the fault layer); here the
+        *silo* resumes participating — Sync picks it up at the next round's
+        ``live()`` pass, Async re-enters its loop."""
+        for s in self.silos:
+            if s.silo_id == node_id:
+                s.alive = True
+                if self._resume_loop is not None:
+                    self.env.schedule(0.0, lambda s=s: self._resume_loop(s),
+                                      f"{s.silo_id}:restart")
 
     def _net_phase(self, rnd: int, when: str):
         if self._fault_injector is not None:
@@ -416,16 +443,27 @@ class BaseOrchestrator:
             # replicated mode: one chain replica per silo + one for the
             # engine's control txs — no Ledger singleton anywhere; blocks
             # gossip as charged fabric transfers, so orchestration itself
-            # experiences latency, partitions and churn. NOTE: ledger_path
-            # persistence is solo-mode only — replicas are in-memory, and a
-            # restarted replica would catch up from peers, not disk.
+            # experiences latency, partitions and churn. With
+            # ``net.wal_dir`` set, every replica also appends its blocks to
+            # a per-node JSONL segment — a killed replica then restarts from
+            # disk (zero fabric bytes) and only peer-syncs the gap.
             from repro.chain import ChainNetwork
+            wal_dir = self.fed.net.wal_dir if self.fed.net else ""
+            if wal_dir:
+                os.makedirs(wal_dir, exist_ok=True)
+
+            def seg(nid: str) -> Optional[str]:
+                return os.path.join(wal_dir, f"{nid}.jsonl") if wal_dir \
+                    else None
+
             self.chain = ChainNetwork(self.env, self.fabric,
                                       sealers=sealer_ids + [ORCH_NODE])
             for s in self.silos:
                 s.bind_ledger(self.chain.add_replica(
-                    s.silo_id, UnifyFLContract(self.fed.mode)))
-            self.ledger = self.chain.add_replica(ORCH_NODE, self.contract)
+                    s.silo_id, UnifyFLContract(self.fed.mode),
+                    segment_path=seg(s.silo_id)))
+            self.ledger = self.chain.add_replica(ORCH_NODE, self.contract,
+                                                 segment_path=seg(ORCH_NODE))
             if self._fault_injector is not None:
                 self._fault_injector.chain = self.chain
         else:
@@ -650,6 +688,7 @@ class AsyncOrchestrator(BaseOrchestrator):
 
             silo.train_and_submit(done)
 
+        self._resume_loop = loop   # a restarted silo re-enters its loop
         for s in self.silos:
             self.env.schedule(0.0, lambda s=s: loop(s), f"{s.silo_id}:start")
         self.env.run()

@@ -8,10 +8,14 @@ measured compute time can be folded into task durations via time_scale.
 
 Events are cancellable handles and may carry a ``key`` (used by the network
 fabric for in-flight transfers: node churn cancels every pending transfer
-keyed to the dead node). ``run(until=deadline)`` advances the clock *to* the
-deadline when the queue drains early — a deadline means the orchestrator
-waited that long, so later events (e.g. a straggler's submission) observe the
-elapsed window.
+keyed to the dead node). A key maps to at most ONE live event: scheduling
+under a key that already has a pending, non-cancelled event **cancels the
+old event and replaces it** (cancel-and-replace). The fabric relies on this
+— re-announcing a CID while a prefetch for it is still in flight must
+supersede the stale transfer, not race it. ``run(until=deadline)`` advances
+the clock *to* the deadline when the queue drains early — a deadline means
+the orchestrator waited that long, so later events (e.g. a straggler's
+submission) observe the elapsed window.
 """
 from __future__ import annotations
 
@@ -47,7 +51,14 @@ class SimEnv:
 
     def schedule(self, delay: float, fn: Callable, note: str = "",
                  key: Any = None) -> Event:
+        """Schedule ``fn`` after ``delay``. Re-registering a live ``key``
+        cancels the previous event (cancel-and-replace): the old callback
+        never fires, and ``cancel(key)`` always refers to the newest."""
         ev = Event(self.now + max(0.0, delay), fn, note, key)
+        if key is not None:
+            prior = self._keyed.get(key)
+            if prior is not None and not prior.cancelled:
+                prior.cancel()
         heapq.heappush(self._q, (ev.time, next(self._counter), ev))
         if key is not None:
             self._keyed[key] = ev

@@ -107,6 +107,12 @@ class GossipReplicator:
         if peer.has(cid):
             self.stats["skipped"] += 1
             return
+        if self.fabric.in_flight(("replicate", peer_id, cid)):
+            # already on the wire to this peer: SimEnv keys hold ONE live
+            # event (cancel-and-replace), so re-pushing would charge the link
+            # again only to land *later* than the transfer it superseded
+            self.stats["skipped"] += 1
+            return
         data = src_node.serve_bytes(cid)
         if data is None:
             self.stats["failed"] += 1

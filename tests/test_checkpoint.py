@@ -43,3 +43,20 @@ def test_restart_after_crash_from_peer_store():
     restored, m = restore_state(b, cid, like=_state())  # b pulls from a
     assert m["step"] == 10
     np.testing.assert_allclose(np.asarray(restored["params"]["w"]).mean(), 7.0)
+
+
+def test_restore_shape_mismatch_names_leaf_and_shapes():
+    """A stored leaf that cannot reshape to the prototype raises ValueError
+    naming the offending leaf (index + store key) and both shapes — not a
+    bare numpy reshape error."""
+    import pytest
+    store = StoreNode("ckpt")
+    bad = {"params": {"w": jnp.full((3, 5), 1.0), "b": jnp.zeros((4,))},
+           "step": jnp.asarray(3, jnp.int32)}
+    cid = save_state(store, bad, step=1)
+    with pytest.raises(ValueError) as ei:
+        restore_state(store, cid, like=_state())
+    msg = str(ei.value)
+    assert "leaf 1" in msg
+    assert "(3, 5)" in msg and "(4, 4)" in msg
+    assert "w" in msg               # the flat store key is named

@@ -1,0 +1,75 @@
+"""benchmarks/recoverybench.py --quick inside the tier-1 budget: the
+BENCH_recovery artifact keeps its schema and the acceptance invariants stay
+machine-checked (every recovery converges with identical state digests, WAL
+replay charges zero fabric bytes, disk recovery catch-up is strictly cheaper
+on the wire than a peer-only rebuild, and the Sync engine survives a
+kill + restart end to end)."""
+import json
+
+import pytest
+
+recoverybench = pytest.importorskip("benchmarks.recoverybench",
+                                    reason="benchmarks/ needs repo-root cwd")
+
+ROW_KEYS = {"preset", "mode", "recovery", "blocks_at_kill",
+            "wal_replayed_blocks", "restart_fabric_bytes", "recovery_s",
+            "catchup_bytes", "chain_bytes_total", "converged",
+            "digest_equal", "verified"}
+E2E_KEYS = {"kills", "restarts", "wal_replayed_blocks",
+            "restart_fabric_bytes", "converged", "digest_equal", "verified",
+            "victim_alive", "wall_clock_s"}
+
+
+@pytest.fixture(scope="module")
+def bench(tmp_path_factory):
+    out_path = tmp_path_factory.mktemp("bench") / "BENCH_recovery.json"
+    result = recoverybench.main(quick=True, out_path=str(out_path))
+    return result, json.loads(out_path.read_text())
+
+
+def test_bench_recovery_schema(bench):
+    result, written = bench
+    assert written == json.loads(json.dumps(result))  # artifact == return
+    assert written["quick"] is True
+    assert set(written) == {"quick", "config", "scenarios", "e2e"}
+    expected = {f"{mode}_{preset}_{rec}"
+                for mode in ("sync", "async")
+                for preset in ("lan", "wan-heterogeneous")
+                for rec in ("disk", "peer")}
+    assert set(written["scenarios"]) == expected
+    for name, row in written["scenarios"].items():
+        assert ROW_KEYS <= set(row), name
+        assert row["blocks_at_kill"] > 0
+        assert row["catchup_bytes"] > 0
+        assert row["recovery_s"] >= 0
+    assert E2E_KEYS <= set(written["e2e"])
+
+
+def test_bench_recovery_acceptance(bench):
+    _, written = bench
+    rows = written["scenarios"]
+    for name, row in rows.items():
+        # every recovery converges: one head, byte-identical contract state
+        assert row["converged"], name
+        assert row["digest_equal"], name
+        assert row["verified"], name
+        # disk replay never touches the fabric
+        assert row["restart_fabric_bytes"] == 0, name
+        if row["recovery"] == "disk":
+            assert row["wal_replayed_blocks"] > 0, name
+        else:
+            assert row["wal_replayed_blocks"] == 0, name
+    for mode in ("sync", "async"):
+        for preset in ("lan", "wan-heterogeneous"):
+            disk = rows[f"{mode}_{preset}_disk"]
+            peer = rows[f"{mode}_{preset}_peer"]
+            # the wire only carries the gap: strictly cheaper than a
+            # peer-only rebuild of the whole chain
+            assert disk["catchup_bytes"] < peer["catchup_bytes"], \
+                (mode, preset)
+    e2e = written["e2e"]
+    assert e2e["kills"] == 1 and e2e["restarts"] == 1
+    assert e2e["wal_replayed_blocks"] > 0
+    assert e2e["restart_fabric_bytes"] == 0
+    assert e2e["converged"] and e2e["digest_equal"] and e2e["verified"]
+    assert e2e["victim_alive"]

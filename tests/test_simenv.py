@@ -80,3 +80,38 @@ def test_nested_scheduling():
     env.run()
     assert seen == ["outer", "inner"]
     assert env.now == 2.0
+
+
+def test_keyed_reregistration_cancels_and_replaces():
+    """Scheduling under a live key supersedes the prior event: the stale
+    callback never fires (the fabric relies on this when a re-announced CID
+    supersedes an in-flight prefetch under the same key)."""
+    env = SimEnv()
+    seen = []
+    env.schedule(1.0, lambda: seen.append("stale"), key=("xfer", "a"))
+    env.schedule(2.0, lambda: seen.append("fresh"), key=("xfer", "a"))
+    env.run()
+    assert seen == ["fresh"]
+
+
+def test_keyed_reregistration_cancel_targets_newest():
+    env = SimEnv()
+    seen = []
+    env.schedule(1.0, lambda: seen.append("old"), key="k")
+    env.schedule(2.0, lambda: seen.append("new"), key="k")
+    assert env.cancel("k")          # cancels the replacement...
+    assert not env.cancel("k")      # ...and nothing is left under the key
+    env.run()
+    assert seen == []               # the replaced event was already dead
+
+
+def test_keyed_reregistration_after_fire_is_independent():
+    """A key whose event already fired is free again: periodic loops that
+    re-schedule themselves under one key are unaffected."""
+    env = SimEnv()
+    seen = []
+    env.schedule(1.0, lambda: seen.append(1), key="tick")
+    env.run()
+    env.schedule(1.0, lambda: seen.append(2), key="tick")
+    env.run()
+    assert seen == [1, 2]
