@@ -3,7 +3,7 @@
 PYTHON ?= python
 PYTEST_ARGS ?=
 
-.PHONY: verify netbench kernelbench scorebench chainbench recoverybench
+.PHONY: verify netbench kernelbench scorebench chainbench recoverybench trace
 
 verify:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q $(PYTEST_ARGS)
@@ -22,3 +22,11 @@ chainbench:
 
 recoverybench:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.recoverybench --quick
+
+# Obs-enabled traced run: exports trace.json (Chrome trace-event JSON —
+# load it at https://ui.perfetto.dev), validates it, prints the run report.
+trace:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.netbench --quick --trace-only \
+		--trace trace.json
+	PYTHONPATH=src $(PYTHON) -m repro.obs.report trace.json --validate
+	PYTHONPATH=src $(PYTHON) -m repro.obs.report trace.json

@@ -22,12 +22,11 @@ bit-reproducible across hosts. Results land in ``BENCH_chain.json``
 """
 from __future__ import annotations
 
-import argparse
-import json
 from typing import Dict, Optional, Tuple
 
-from benchmarks.common import CNN, emit, timed
-from repro.config import FaultScenario, FedConfig, NetConfig
+from benchmarks.common import (CNN, bench_cli, emit, emit_acceptance, timed,
+                               write_artifact)
+from repro.config import FaultScenario, FedConfig, NetConfig, ObsConfig
 from repro.core.builder import SiloSpec, build_image_experiment
 
 TRAIN_WINDOW_S = 1.0    # base simulated local-training window per silo
@@ -113,9 +112,11 @@ def run_grid(quick: bool) -> Dict[str, Dict]:
     return out
 
 
-def run_partition(quick: bool) -> Dict:
+def run_partition(quick: bool, trace_path: str = "") -> Dict:
     """Sealer partition on wan-heterogeneous: fork both sides, heal,
-    converge — the acceptance scenario."""
+    converge — the acceptance scenario. With ``trace_path`` the run is
+    obs-enabled and exports its timeline (fork/reorg chain events
+    included)."""
     silos, rounds = 4, 3
     scenarios = (
         FaultScenario(action="partition", node="silo2,silo3",
@@ -126,8 +127,13 @@ def run_partition(quick: bool) -> Dict:
                     prefetch=True, scenarios=scenarios)
     fed = _fed("sync", net, silos=silos, rounds=rounds,
                round_deadline_s=3.0, scorer_deadline_s=2.0)
+    if trace_path:
+        from repro.config import replace
+        fed = replace(fed, obs=ObsConfig(enabled=True))
     orch = _run(fed, n_train=300 if quick else 900,
                 n_test=120 if quick else 300, seed=1)
+    if trace_path:
+        orch.export_trace(trace_path)
     row = _chain_row(orch)
     row["rounds_completed"] = all(s.rounds_done == rounds
                                   for s in orch.silos)
@@ -158,10 +164,11 @@ def run_byzantine(quick: bool) -> Dict:
     return row
 
 
-def main(quick: bool = True, out_path: str = "BENCH_chain.json") -> Dict:
+def main(quick: bool = True, out_path: str = "BENCH_chain.json",
+         trace_path: str = "") -> Dict:
     with timed("chainbench"):
         grid = run_grid(quick)
-        partition = run_partition(quick)
+        partition = run_partition(quick, trace_path)
         byzantine = run_byzantine(quick)
     out = {
         "quick": quick,
@@ -171,8 +178,7 @@ def main(quick: bool = True, out_path: str = "BENCH_chain.json") -> Dict:
         "partition": partition,
         "byzantine": byzantine,
     }
-    with open(out_path, "w") as f:
-        json.dump(out, f, indent=2, sort_keys=True)
+    write_artifact(out, out_path)
     ok = (all(r["heads_converged"] and r["state_digests_equal"]
               and r["verified"] and r["blocks_sealed"] > 0
               and r["tx_finality_s"]["n"] > 0
@@ -186,16 +192,12 @@ def main(quick: bool = True, out_path: str = "BENCH_chain.json") -> Dict:
           and byzantine["equivocations_sent"] >= 1
           and byzantine["equivocations_seen"] >= 1
           and byzantine["heads_converged"])
-    emit("chain_acceptance", "PASS" if ok else "FAIL",
-         "replicas converge with identical state in every scenario; WAN "
-         "finality > LAN; partition forks + heals; equivocation detected")
+    emit_acceptance(
+        "chain", ok,
+        "replicas converge with identical state in every scenario; WAN "
+        "finality > LAN; partition forks + heals; equivocation detected")
     return out
 
 
 if __name__ == "__main__":
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--quick", action="store_true",
-                    help="tier-1 sized run (small data, few rounds)")
-    ap.add_argument("--out", default="BENCH_chain.json")
-    args = ap.parse_args()
-    main(quick=args.quick, out_path=args.out)
+    bench_cli(main, doc=__doc__, default_out="BENCH_chain.json")

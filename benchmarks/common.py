@@ -3,13 +3,20 @@
 Every benchmark prints ``name,value,derived`` CSV rows and returns a dict.
 Workloads are scaled for this CPU container (synthetic data stand-ins per
 DESIGN.md §7.2) while keeping the paper's configuration axes intact.
+
+The boilerplate every benchmark used to re-implement lives here once:
+``write_artifact`` (BENCH_*.json), ``emit_acceptance`` (the PASS/FAIL row),
+and ``bench_cli`` (the ``--quick/--out/--trace`` argparse entrypoint).
+``timed`` sections are also recorded so host-side benchmarks (kernels,
+scoring) can export them as a Chrome trace via ``write_host_trace``.
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 from contextlib import contextmanager
-from typing import Dict
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -39,13 +46,66 @@ def emit(name: str, value, derived: str = "") -> None:
     sys.stdout.flush()
 
 
+# (name, t0, t1) of every `timed` section this process ran — the host-side
+# timeline `write_host_trace` exports for benchmarks with no simulated clock
+_HOST_SECTIONS: List[Tuple[str, float, float]] = []
+
+
 @contextmanager
 def timed(name: str):
     t0 = time.perf_counter()
     yield
-    emit(name + "_wall_s", f"{time.perf_counter() - t0:.2f}")
+    t1 = time.perf_counter()
+    _HOST_SECTIONS.append((name, t0, t1))
+    emit(name + "_wall_s", f"{t1 - t0:.2f}")
 
 
 def acc_summary(ge: Dict[str, Dict[str, float]]):
     accs = [m["accuracy"] for m in ge.values()]
     return float(np.mean(accs)), float(np.min(accs)), float(np.max(accs))
+
+
+def write_artifact(out: Dict, path: str) -> None:
+    """Write the benchmark's result dict to its BENCH_*.json artifact."""
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+
+
+def emit_acceptance(prefix: str, ok: bool, detail: str) -> bool:
+    emit(f"{prefix}_acceptance", "PASS" if ok else "FAIL", detail)
+    return ok
+
+
+def write_host_trace(path: str) -> None:
+    """Export this process's ``timed`` sections as a Chrome-trace JSON —
+    the host-clock analogue of an orchestrator's ``export_trace`` for
+    benchmarks that never build a SimEnv (kernels, scoring)."""
+    from repro.obs.export import write_chrome_trace
+    from repro.obs.tracer import Tracer
+    tr = Tracer()
+    base = _HOST_SECTIONS[0][1] if _HOST_SECTIONS else 0.0
+    for name, t0, t1 in _HOST_SECTIONS:
+        tr.span_at(f"bench.{name}", "host/sections", t0 - base, t1 - base)
+    write_chrome_trace(path, tr)
+
+
+def bench_cli(main_fn: Callable[..., Dict], *, doc: str, default_out: str,
+              extra: Optional[Callable] = None) -> Dict:
+    """The shared ``__main__`` entrypoint: ``--quick``, ``--out`` and
+    ``--trace`` (Chrome-trace JSON beside the artifact). ``extra(ap)`` may
+    register benchmark-specific flags; their parsed values pass through to
+    ``main_fn`` as keyword arguments by dest name."""
+    import argparse
+    ap = argparse.ArgumentParser(description=doc)
+    ap.add_argument("--quick", action="store_true",
+                    help="tier-1 sized run (small data, few rounds)")
+    ap.add_argument("--out", default=default_out)
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="also export a Chrome-trace JSON (Perfetto-loadable)")
+    if extra is not None:
+        extra(ap)
+    ns = vars(ap.parse_args())
+    kwargs = {k: v for k, v in ns.items()
+              if k not in ("quick", "out", "trace")}
+    return main_fn(quick=ns["quick"], out_path=ns["out"],
+                   trace_path=ns["trace"], **kwargs)

@@ -10,12 +10,12 @@ HBM bytes each path moves. Results land in ``BENCH_kernels.json`` so the
 perf trajectory is tracked across PRs."""
 from __future__ import annotations
 
-import json
 import time
 
 import jax
 import jax.numpy as jnp
 
+from benchmarks import common
 from benchmarks.common import emit, timed
 from repro.kernels import ops, ref
 
@@ -41,7 +41,8 @@ def _q8_bytes(M: int, N: int, out_bytes: int, fused: bool) -> int:
     return base if fused else base + 2 * (4 * M * N)
 
 
-def main(quick: bool = True, out_path: str = "BENCH_kernels.json"):
+def main(quick: bool = True, out_path: str = "BENCH_kernels.json",
+         trace_path: str = ""):
     out = {}
     with timed("kernelbench"):
         M, N = 8, 1 << 20  # 8 models x 1M params (63x the paper's CNN)
@@ -157,12 +158,15 @@ def main(quick: bool = True, out_path: str = "BENCH_kernels.json"):
              f"path={out['wkv_path']} "
              f"({us_naive / max(us_disp, 1e-9):.2f}x vs naive)")
     if out_path:
-        with open(out_path, "w") as f:
-            json.dump({k: (round(v, 3) if isinstance(v, float) else v)
-                       for k, v in out.items()}, f, indent=2, sort_keys=True)
+        common.write_artifact(
+            {k: (round(v, 3) if isinstance(v, float) else v)
+             for k, v in out.items()}, out_path)
         emit("kernelbench_json", out_path)
+    if trace_path:
+        # host-clock benchmark: export the timed sections as the trace
+        common.write_host_trace(trace_path)
     return out
 
 
 if __name__ == "__main__":
-    main()
+    common.bench_cli(main, doc=__doc__, default_out="BENCH_kernels.json")

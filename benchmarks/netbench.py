@@ -23,12 +23,11 @@ invariants are asserted by ``tests/test_netbench_schema.py``).
 """
 from __future__ import annotations
 
-import argparse
-import json
 from typing import Dict, Optional, Tuple
 
-from benchmarks.common import CNN, emit, timed
-from repro.config import FaultScenario, FedConfig, NetConfig
+from benchmarks.common import (CNN, bench_cli, emit, emit_acceptance, timed,
+                               write_artifact)
+from repro.config import FaultScenario, FedConfig, NetConfig, ObsConfig
 from repro.core.builder import SiloSpec, build_image_experiment
 
 TRAIN_WINDOW_S = 1.0    # base simulated local-training window per silo
@@ -158,7 +157,7 @@ def run_delta(quick: bool) -> Dict:
         for mark in orch.round_log:
             # store bytes only: consensus gossip (chain_bytes) rides the same
             # fabric but is not what the wire-format lever acts on
-            store_b = mark["wan_bytes"] - mark.get("chain_bytes", 0)
+            store_b = mark["wan_bytes"] - mark["chain_bytes"]
             rows.append(store_b - prev)
             prev = store_b
         per_round[comp] = rows
@@ -200,7 +199,49 @@ def run_failover(quick: bool) -> Dict:
             "cancelled_inflight": orch.fabric.stats["cancelled"]}
 
 
-def main(quick: bool = True, out_path: str = "BENCH_net.json") -> Dict:
+def run_traced(quick: bool, trace_path: str):
+    """The observability scenario: a Sync federation on wan-heterogeneous
+    with a kill/restart fault, run with ``ObsConfig(enabled=True)`` and
+    exported as a Chrome-trace JSON. Every instrumented surface appears:
+    round-phase spans per silo, per-lane transfer spans, chain seal/import
+    events, and a kill->restart recovery span. Returns the orchestrator so
+    the e2e tests reuse the same run for metrics-parity checks. This run is
+    NOT part of the measured benchmark sections (those stay obs-off)."""
+    import os
+    import tempfile
+    silos, rounds = 4, 3
+    wal_dir = os.path.join(tempfile.mkdtemp(prefix="netbench_trace_"), "wal")
+    scenarios = (
+        FaultScenario(action="kill", node="silo2", round=2, when="train"),
+        FaultScenario(action="restart", node="silo2", round=3, when="train"),
+    )
+    net = NetConfig(preset="wan-heterogeneous", replication_factor=1,
+                    prefetch=True, scenarios=scenarios, wal_dir=wal_dir)
+    fed = FedConfig(n_silos=silos, clients_per_silo=1, rounds=rounds,
+                    local_epochs=1, mode="sync", scorer="accuracy",
+                    agg_policy="all", score_policy="median",
+                    round_deadline_s=3.0, scorer_deadline_s=2.0, net=net,
+                    obs=ObsConfig(enabled=True))
+    specs = [SiloSpec(extra_train_delay=TRAIN_WINDOW_S + STAGGER_S * i)
+             for i in range(silos)]
+    orch = build_image_experiment(CNN, fed, n_train=300 if quick else 900,
+                                  n_test=120 if quick else 300,
+                                  silo_specs=specs, seed=3)
+    for s in orch.silos:
+        s.time_scale = TIME_SCALE
+    orch.run(rounds)
+    orch.env.run()          # drain in-flight transfers before the export
+    orch.export_trace(trace_path)
+    emit("net_trace_events", len(orch.obs.tracer.spans),
+         f"spans exported to {trace_path}")
+    return orch
+
+
+def main(quick: bool = True, out_path: str = "BENCH_net.json",
+         trace_path: str = "", trace_only: bool = False) -> Dict:
+    if trace_only:
+        run_traced(quick, trace_path or "trace.json")
+        return {}
     with timed("netbench"):
         grid, speedup, stall_ratio = run_grid(quick)
         delta = run_delta(quick)
@@ -218,23 +259,25 @@ def main(quick: bool = True, out_path: str = "BENCH_net.json") -> Dict:
         "delta_bytes_ratio": delta["delta_bytes_ratio"],
         "failover": failover,
     }
-    with open(out_path, "w") as f:
-        json.dump(out, f, indent=2, sort_keys=True)
+    write_artifact(out, out_path)
+    if trace_path:
+        # a dedicated obs-enabled run: the measured sections above stay
+        # obs-off so the tracer never skews the benchmark numbers
+        run_traced(quick, trace_path)
     ok = (stall_ratio <= 0.5 and speedup >= 0.95
           and out["prefetch_hit_rate"] > 0
           and delta["delta_bytes_ratio"] <= 0.5
           and failover["reroutes"] >= 1 and failover["completed"])
-    emit("net_acceptance", "PASS" if ok else "FAIL",
-         "prefetch halves async WAN fetch stall without slowing the round, "
-         "hit rate > 0, int8-delta <= 0.5x WAN bytes from round 2, "
-         "failover rerouted")
+    emit_acceptance(
+        "net", ok,
+        "prefetch halves async WAN fetch stall without slowing the round, "
+        "hit rate > 0, int8-delta <= 0.5x WAN bytes from round 2, "
+        "failover rerouted")
     return out
 
 
 if __name__ == "__main__":
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--quick", action="store_true",
-                    help="tier-1 sized run (small data, 2 rounds)")
-    ap.add_argument("--out", default="BENCH_net.json")
-    args = ap.parse_args()
-    main(quick=args.quick, out_path=args.out)
+    bench_cli(main, doc=__doc__, default_out="BENCH_net.json",
+              extra=lambda ap: ap.add_argument(
+                  "--trace-only", action="store_true",
+                  help="skip the measured grid; only produce the traced run"))

@@ -27,13 +27,12 @@ asserted by ``tests/test_recoverybench_schema.py``).
 """
 from __future__ import annotations
 
-import argparse
-import json
 import os
 import tempfile
 from typing import Dict, Optional
 
-from benchmarks.common import emit, timed
+from benchmarks.common import (bench_cli, emit, emit_acceptance, timed,
+                               write_artifact)
 from repro.chain import ChainNetwork
 from repro.core.contract import UnifyFLContract
 from repro.core.simenv import SimEnv
@@ -137,11 +136,13 @@ def run_grid(quick: bool, wal_root: str) -> Dict[str, Dict]:
     return out
 
 
-def run_e2e(quick: bool, wal_root: str) -> Dict:
+def run_e2e(quick: bool, wal_root: str, trace_path: str = "") -> Dict:
     """The real Sync engine: kill silo2 mid-federation, restart it a round
-    later, converge — through ``FaultScenario`` wiring end to end."""
+    later, converge — through ``FaultScenario`` wiring end to end. With
+    ``trace_path`` the run is obs-enabled and exports its timeline (the
+    kill->restart recovery span included)."""
     from benchmarks.common import CNN
-    from repro.config import FaultScenario, FedConfig, NetConfig
+    from repro.config import FaultScenario, FedConfig, NetConfig, ObsConfig
     from repro.core.builder import SiloSpec, build_image_experiment
     silos, rounds = 4, 3
     scenarios = (
@@ -154,7 +155,8 @@ def run_e2e(quick: bool, wal_root: str) -> Dict:
     fed = FedConfig(n_silos=silos, clients_per_silo=1, rounds=rounds,
                     local_epochs=1, mode="sync", scorer="accuracy",
                     agg_policy="all", score_policy="median",
-                    round_deadline_s=3.0, scorer_deadline_s=2.0, net=net)
+                    round_deadline_s=3.0, scorer_deadline_s=2.0, net=net,
+                    obs=ObsConfig(enabled=True) if trace_path else None)
     specs = [SiloSpec(extra_train_delay=1.0 + 0.05 * i)
              for i in range(silos)]
     orch = build_image_experiment(CNN, fed, n_train=300 if quick else 900,
@@ -164,6 +166,8 @@ def run_e2e(quick: bool, wal_root: str) -> Dict:
         s.time_scale = 0.0
     orch.run(rounds)
     orch.env.run()          # drain in-flight gossip so convergence is final
+    if trace_path:
+        orch.export_trace(trace_path)
     chain = orch.chain
     row = {
         "kills": chain.stats["kills"],
@@ -182,19 +186,19 @@ def run_e2e(quick: bool, wal_root: str) -> Dict:
     return row
 
 
-def main(quick: bool = True, out_path: str = "BENCH_recovery.json") -> Dict:
+def main(quick: bool = True, out_path: str = "BENCH_recovery.json",
+         trace_path: str = "") -> Dict:
     wal_root = tempfile.mkdtemp(prefix="recoverybench_")
     with timed("recoverybench"):
         grid = run_grid(quick, wal_root)
-        e2e = run_e2e(quick, wal_root)
+        e2e = run_e2e(quick, wal_root, trace_path)
     out = {
         "quick": quick,
         "config": {"nodes": list(NODES), "victim": VICTIM},
         "scenarios": grid,
         "e2e": e2e,
     }
-    with open(out_path, "w") as f:
-        json.dump(out, f, indent=2, sort_keys=True)
+    write_artifact(out, out_path)
 
     def pair(mode: str, preset: str):
         return (grid[f"{mode}_{preset}_disk"], grid[f"{mode}_{preset}_peer"])
@@ -218,17 +222,13 @@ def main(quick: bool = True, out_path: str = "BENCH_recovery.json") -> Dict:
           and e2e["restart_fabric_bytes"] == 0
           and e2e["converged"] and e2e["digest_equal"] and e2e["verified"]
           and e2e["victim_alive"])
-    emit("recovery_acceptance", "PASS" if ok else "FAIL",
-         "disk recovery converges at a fraction of peer-only catch-up "
-         "bytes, WAL replay charges zero fabric traffic, and the Sync "
-         "engine survives a kill+restart with identical state digests")
+    emit_acceptance(
+        "recovery", ok,
+        "disk recovery converges at a fraction of peer-only catch-up "
+        "bytes, WAL replay charges zero fabric traffic, and the Sync "
+        "engine survives a kill+restart with identical state digests")
     return out
 
 
 if __name__ == "__main__":
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--quick", action="store_true",
-                    help="tier-1 sized run (few rounds)")
-    ap.add_argument("--out", default="BENCH_recovery.json")
-    args = ap.parse_args()
-    main(quick=args.quick, out_path=args.out)
+    bench_cli(main, doc=__doc__, default_out="BENCH_recovery.json")

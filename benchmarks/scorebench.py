@@ -22,8 +22,6 @@ batched call, score parity <= 1e-5) are asserted by
 """
 from __future__ import annotations
 
-import argparse
-import json
 import time
 from typing import Dict
 
@@ -31,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import CNN, emit, timed
 from repro.core import wire
 from repro.core.store import deserialize_pytree, serialize_pytree
@@ -77,7 +76,8 @@ def _time_min_interleaved(fns, iters: int):
     return best
 
 
-def main(quick: bool = True, out_path: str = "BENCH_scoring.json") -> Dict:
+def main(quick: bool = True, out_path: str = "BENCH_scoring.json",
+         trace_path: str = "") -> Dict:
     k = 12 if quick else 16
     n_test = 192 if quick else 1024
     bs = 32 if quick else 128
@@ -150,19 +150,17 @@ def main(quick: bool = True, out_path: str = "BENCH_scoring.json") -> Dict:
                        "batched_per_round": batched_syncs},
         "parity_max_abs_diff": parity,
     }
-    with open(out_path, "w") as f:
-        json.dump(out, f, indent=2, sort_keys=True)
+    common.write_artifact(out, out_path)
+    if trace_path:
+        # host-clock benchmark: export the timed sections as the trace
+        common.write_host_trace(trace_path)
     ok = (speedup >= 3.0 and batched_syncs == 1 and parity <= 1e-5)
-    emit("score_acceptance", "PASS" if ok else "FAIL",
-         "batched >= 3x sequential at K >= 4, one device->host transfer "
-         "per (scorer, round), parity <= 1e-5")
+    common.emit_acceptance(
+        "score", ok,
+        "batched >= 3x sequential at K >= 4, one device->host transfer "
+        "per (scorer, round), parity <= 1e-5")
     return out
 
 
 if __name__ == "__main__":
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--quick", action="store_true",
-                    help="tier-1 sized run (K=12, 192 test examples)")
-    ap.add_argument("--out", default="BENCH_scoring.json")
-    args = ap.parse_args()
-    main(quick=args.quick, out_path=args.out)
+    common.bench_cli(main, doc=__doc__, default_out="BENCH_scoring.json")

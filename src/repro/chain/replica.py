@@ -57,6 +57,7 @@ from typing import Any, Dict, List, Optional, Set, Tuple
 
 from repro.chain import forkchoice, sealer as sealing
 from repro.chain.forkchoice import GENESIS
+from repro.obs.metrics import StatsView
 
 WAL_FORMAT_VERSION = 2   # block hashes cover difficulty/salt/txid
 
@@ -172,12 +173,7 @@ class ChainReplica:
         self.wal_stopped_at: Optional[int] = None
         self._replaying = False      # suppress WAL appends during replay
         self._wal_records = 0        # valid records currently in the segment
-        self.stats = {"txs": 0, "blocks": 0, "bytes": 0, "blocks_sealed": 0,
-                      "blocks_imported": 0, "forks_observed": 0, "reorgs": 0,
-                      "max_reorg_depth": 0, "equivocations_seen": 0,
-                      "orphans": 0, "invalid": 0, "reverts": 0,
-                      "wal_blocks": 0, "wal_replayed": 0,
-                      "wal_replay_bytes": 0}
+        self.stats = StatsView("replica", node_id)
         self._init_memory()
 
     def _init_memory(self) -> None:

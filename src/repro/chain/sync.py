@@ -48,6 +48,9 @@ from repro.chain.adapter import ContractExecutor, LedgerView
 from repro.chain.replica import (GENESIS, Block, ChainReplica,
                                  ReplicaSnapshot)
 from repro.chain import sealer as sealing
+from repro.obs import events as obsev
+from repro.obs.metrics import StatsView
+from repro.obs.tracer import NULL_TRACER
 
 REQUEST_NBYTES = 96          # a catch-up request is one tiny control message
 LOCATOR_HASH_NBYTES = 64     # each locator entry is one hex block hash
@@ -65,11 +68,8 @@ class ChainNetwork:
         # finality probes: txid -> submit time / txid -> {node: first-exec time}
         self.tx_submit_t: Dict[str, float] = {}
         self.tx_exec_t: Dict[str, Dict[str, float]] = {}
-        self.stats = {"broadcasts": 0, "delivered": 0, "undeliverable": 0,
-                      "catchup_requests": 0, "catchup_blocks": 0,
-                      "head_announces": 0, "equivocations_sent": 0,
-                      "kills": 0, "restarts": 0, "wal_replayed": 0,
-                      "restart_fabric_bytes": 0}
+        self.stats = StatsView("chain_net")
+        self._kill_t: Dict[str, float] = {}   # node -> sim time of last kill
 
     # -- membership ---------------------------------------------------------- #
     def add_replica(self, node_id: str, contract, *,
@@ -97,8 +97,9 @@ class ChainNetwork:
         does both)."""
         self.replicas[node_id].wipe()
         self.stats["kills"] += 1
+        self._kill_t[node_id] = self._now()
         if self.env is not None:
-            self.env.trace.append((self._now(), f"chain:kill:{node_id}"))
+            self.env.emit(obsev.chain_kill(node_id))
 
     def restart(self, node_id: str, *,
                 snapshot: Optional[ReplicaSnapshot] = None) -> int:
@@ -114,12 +115,21 @@ class ChainNetwork:
         self.stats["restart_fabric_bytes"] += \
             (self.fabric.stats["bytes"] if self.fabric else 0) - bytes_before
         if self.env is not None:
-            self.env.trace.append(
-                (self._now(), f"chain:restart:{node_id}:wal={n}"))
+            self.env.emit(obsev.chain_restart(node_id, n))
+            tr = self.env.tracer
+            t_kill = self._kill_t.pop(node_id, None)
+            if tr.enabled and t_kill is not None:
+                # the kill -> restart outage, on the node's chain track
+                tr.span_at("phase.recovery", f"{node_id}/chain",
+                           t_kill, self._now(), wal_blocks=n)
         return n
 
     def _now(self) -> float:
         return self.env.now if self.env is not None else 0.0
+
+    @property
+    def _tracer(self):
+        return self.env.tracer if self.env is not None else NULL_TRACER
 
     # -- submission ---------------------------------------------------------- #
     def submit(self, replica: ChainReplica, sender: str, method: str,
@@ -141,6 +151,10 @@ class ChainNetwork:
             twin = sealing.equivocating_twin(blk)
             rep.import_block(twin)      # the equivocator knows both variants
             self.stats["equivocations_sent"] += 1
+        tr = self._tracer
+        if tr.enabled:
+            tr.event("chain.seal", f"{src}/chain", self._now(),
+                     hash=blk.hash[:12], height=blk.height)
         peers = sorted(p for p in self.replicas if p != src)
         for i, peer in enumerate(peers):
             send = twin if (twin is not None and i % 2 == 1) else blk
@@ -181,7 +195,17 @@ class ChainNetwork:
         if rep is None:
             return
         self.stats["delivered"] += 1
+        tr = self._tracer
+        reorgs_before = rep.stats["reorgs"] if tr.enabled else 0
         status = rep.import_block(blk)
+        if tr.enabled:
+            tr.event("chain.import", f"{dst}/chain", self._now(),
+                     status=status, src=src, hash=blk.hash[:12],
+                     height=blk.height)
+            if rep.stats["reorgs"] > reorgs_before:
+                tr.event("chain.reorg", f"{dst}/chain", self._now(),
+                         depth=rep.stats["max_reorg_depth"],
+                         head=rep.head[:12])
         if status == "orphan":
             self._request_catchup(dst, src, blk)
         elif status == "side":
@@ -227,6 +251,10 @@ class ChainNetwork:
 
     def _request_catchup(self, dst: str, src: str, blk: Block) -> None:
         self.stats["catchup_requests"] += 1
+        tr = self._tracer
+        if tr.enabled:
+            tr.event("chain.catchup-request", f"{dst}/chain", self._now(),
+                     peer=src, orphan=blk.hash[:12])
         locator = self._locator(dst)
         nbytes = REQUEST_NBYTES + LOCATOR_HASH_NBYTES * len(locator)
         self._transfer(dst, src, f"req:{blk.hash[:12]}", nbytes,
@@ -255,6 +283,10 @@ class ChainNetwork:
             return
         batch.reverse()
         self.stats["catchup_blocks"] += len(batch)
+        tr = self._tracer
+        if tr.enabled:
+            tr.event("chain.catchup-serve", f"{src}/chain", self._now(),
+                     peer=dst, n=len(batch))
         self._transfer(src, dst, f"chain:{blk.hash[:12]}",
                        sum(b.nbytes() for b in batch),
                        lambda: self._deliver_batch(dst, src, batch),
@@ -264,6 +296,10 @@ class ChainNetwork:
         rep = self.replicas.get(dst)
         if rep is None:
             return
+        tr = self._tracer
+        if tr.enabled:
+            tr.event("chain.catchup-import", f"{dst}/chain", self._now(),
+                     src=src, n=len(batch))
         for b in batch:
             rep.import_block(b)
         # a truncated batch (divergence deeper than MAX_CATCHUP) parks whole
@@ -323,4 +359,4 @@ class ChainNetwork:
         return out
 
     def totals(self, key: str) -> int:
-        return sum(rep.stats.get(key, 0) for rep in self.replicas.values())
+        return sum(rep.stats[key] for rep in self.replicas.values())

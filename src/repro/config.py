@@ -283,6 +283,25 @@ class NetConfig:
 
 
 @dataclass(frozen=True)
+class ObsConfig:
+    """Observability (repro.obs): structured tracing + unified metrics.
+
+    Disabled (the default, and what every measured benchmark section uses)
+    costs nothing on the hot path: the SimEnv carries the shared no-op
+    tracer and components only keep their schema'd stats views — which they
+    do regardless."""
+    enabled: bool = False
+    # > 0 bounds SimEnv.trace as a ring buffer (oldest entries dropped):
+    # thousand-silo sweeps must not accumulate unbounded (t, note) tuples
+    trace_cap: int = 0
+    # non-empty: auto-export a Chrome-trace JSON (Perfetto-loadable) here
+    # when the engine's run() returns
+    trace_path: str = ""
+    # include a flat metrics-registry snapshot in every round_log mark
+    metrics_in_round_log: bool = True
+
+
+@dataclass(frozen=True)
 class FedConfig:
     n_silos: int = 3
     clients_per_silo: int = 3
@@ -311,6 +330,8 @@ class FedConfig:
     keyframe_every: int = 0
     # simulated store-network fabric; None = instantaneous in-memory store
     net: Optional[NetConfig] = None
+    # observability (repro.obs); None = default ObsConfig (everything off)
+    obs: Optional[ObsConfig] = None
 
 
 @dataclass(frozen=True)

@@ -44,6 +44,7 @@ from repro.core.store import StoreNetwork, StoreNode
 from repro.fed import scorebatch
 from repro.fed.cluster import Cluster
 from repro.kernels import ops
+from repro.obs import Observability, events as obsev
 
 
 @dataclass
@@ -131,8 +132,7 @@ class SiloRuntime:
                                           **args) if self.alive else None),
                     f"{self.silo_id}:resubmit:{method}")
             else:
-                self.env.trace.append(
-                    (self.env.now, f"{self.silo_id}:tx-revert:{method}"))
+                self.env.emit(obsev.tx_revert(self.silo_id, method))
             return None
 
     def register(self):
@@ -145,6 +145,8 @@ class SiloRuntime:
     def fail(self):
         """Crash the silo (stops reacting to events)."""
         self.alive = False
+        # a crashed silo's open phase span ends here, marked aborted
+        self.env.tracer.close_track(f"{self.silo_id}/phases", self.env.now)
 
     # -- training ---------------------------------------------------------- #
     def flat_spec(self):
@@ -184,8 +186,7 @@ class SiloRuntime:
                     dm.vec()  # resolve the delta base chain (may fetch)
                 peers.append(dm)
             except (KeyError, IOError):
-                self.env.trace.append(
-                    (self.env.now, f"{self.silo_id}:pull-fail:{c.cid[:8]}"))
+                self.env.emit(obsev.pull_fail(self.silo_id, c.cid))
         if not peers:
             return 0
         weights = [1.0] * (1 + len(peers))
@@ -233,10 +234,21 @@ class SiloRuntime:
         # the simulated clock here (network charge is not time_scale'd)
         net_wait = self.store.drain_transfer_time()
         duration = compute + self.extra_train_delay + net_wait
+        tr = self.env.tracer
+        t0_sim = self.env.now
+        track = f"{self.silo_id}/phases"
+        if net_wait > 0:
+            # the pulls happened during pull_and_merge; their WAN charge
+            # stalls the head of this round's window
+            tr.span_at("phase.fetch-stall", track, t0_sim, t0_sim + net_wait,
+                       round=self.rounds_done + 1)
+        sp = tr.begin("phase.train", track, t0_sim,
+                      round=self.rounds_done + 1)
 
         def finish():
             if not self.alive:
                 return
+            tr.end(sp, self.env.now)
             payload = self._encode()
             cid = self.store.put(payload)
             self.last_cid = cid
@@ -288,20 +300,27 @@ class SiloRuntime:
                 kept.append(cid)
             except (KeyError, IOError):
                 # model unreachable (partition/churn): drop this assignment
-                self.env.trace.append(
-                    (self.env.now, f"{self.silo_id}:score-fetch-fail:{cid[:8]}"))
+                self.env.emit(obsev.score_fetch_fail(self.silo_id, cid))
         if not kept:
             self._submit("set_busy", busy=False)
             return
         scores = scorebatch.score_round_batch(
             self.cluster, decoded, self.flat_spec(), method=self.score_method)
         compute = (time.perf_counter() - t0) * self.time_scale
-        duration = compute + self.extra_score_delay \
-            + self.store.drain_transfer_time()
+        net_wait = self.store.drain_transfer_time()
+        duration = compute + self.extra_score_delay + net_wait
+        tr = self.env.tracer
+        t0_sim = self.env.now
+        track = f"{self.silo_id}/phases"
+        if net_wait > 0:
+            tr.span_at("phase.fetch-stall", track, t0_sim, t0_sim + net_wait,
+                       k=len(kept))
+        sp = tr.begin("phase.score", track, t0_sim, k=len(kept))
 
         def finish():
             if not self.alive:
                 return
+            tr.end(sp, self.env.now)
             for cid, score in zip(kept, scores):
                 # can revert against a stale replica (the model's block or a
                 # reassignment hasn't landed locally yet): bounded retries
@@ -362,7 +381,11 @@ def _rebuild_like(like, flat: Dict[str, np.ndarray]):
 class BaseOrchestrator:
     def __init__(self, fed: FedConfig, *, ledger_path: Optional[str] = None):
         self.fed = fed
-        self.env = SimEnv()
+        # observability bundle: null tracer + registry when fed.obs is unset
+        # or disabled, so the hot paths stay no-op
+        self.obs = Observability(fed.obs)
+        self.env = SimEnv(trace_cap=self.obs.cfg.trace_cap)
+        self.env.tracer = self.obs.tracer
         self.network = StoreNetwork()
         self.contract = UnifyFLContract(mode=fed.mode)
         self.silos: List[SiloRuntime] = []
@@ -381,6 +404,7 @@ class BaseOrchestrator:
 
     def add_silo(self, cluster: Cluster, **kw) -> SiloRuntime:
         store = self.network.add_node(cluster.silo_id)
+        self.obs.adopt(store.stats)
         silo = SiloRuntime(cluster, store, self.contract, self.env,
                            self.fed, **kw)
         self.silos.append(silo)
@@ -394,14 +418,17 @@ class BaseOrchestrator:
         topo = Topology(net.preset, seed=net.seed)
         self.fabric = NetFabric(self.env, topo, chunk_bytes=net.chunk_bytes,
                                 seed=net.seed)
+        self.obs.adopt(self.fabric.stats)
         self.network.attach_fabric(self.fabric)
         if net.replication_factor > 0:
             self.gossip = GossipReplicator(self.fabric, self.network,
                                            factor=net.replication_factor)
+            self.obs.adopt(self.gossip.stats)
             self.fabric.subscribe(self.gossip.on_announce)
         if net.prefetch:
             self.prefetcher = Prefetcher(self.fabric, self.network,
                                          delay_s=net.prefetch_delay_s)
+            self.obs.adopt(self.prefetcher.stats)
             self.fabric.subscribe(self.prefetcher.on_announce)
         if net.scenarios:
             # _build_net runs after every add_silo, so the full node set is
@@ -464,6 +491,9 @@ class BaseOrchestrator:
                     segment_path=seg(s.silo_id)))
             self.ledger = self.chain.add_replica(ORCH_NODE, self.contract,
                                                  segment_path=seg(ORCH_NODE))
+            self.obs.adopt(self.chain.stats)
+            for rep in self.chain.replicas.values():
+                self.obs.adopt(rep.stats)
             if self._fault_injector is not None:
                 self._fault_injector.chain = self.chain
         else:
@@ -483,17 +513,34 @@ class BaseOrchestrator:
     def _mark_round(self, rnd: int, silo_id: Optional[str] = None):
         """Log a round boundary with the fabric's cumulative WAN bytes
         (``chain_bytes`` separates consensus gossip from store traffic)."""
-        self.round_log.append(
-            {"round": rnd, "silo": silo_id, "t": self.env.now,
-             "wan_bytes": self.fabric.stats["bytes"] if self.fabric else 0,
-             "chain_bytes":
-                 self.fabric.stats["chain_bytes"] if self.fabric else 0})
+        mark = {"round": rnd, "silo": silo_id, "t": self.env.now,
+                "wan_bytes": self.fabric.stats["bytes"] if self.fabric else 0,
+                "chain_bytes":
+                    self.fabric.stats["chain_bytes"] if self.fabric else 0}
+        if self.obs.enabled and self.obs.cfg.metrics_in_round_log:
+            mark["metrics"] = self.obs.registry.flat()
+        self.round_log.append(mark)
 
     def live(self) -> List[SiloRuntime]:
         return [s for s in self.silos if s.alive]
 
     def summary(self) -> Dict:
         return {s.silo_id: s.metrics for s in self.silos}
+
+    # -- observability -------------------------------------------------------- #
+    def _finish_obs(self):
+        """End-of-run hook: close any spans still open (marked truncated)
+        and auto-export when the config names a trace path."""
+        self.obs.finish(self.env.now)
+        if self.obs.cfg.trace_path:
+            self.obs.export(self.obs.cfg.trace_path)
+
+    def export_trace(self, path: str) -> None:
+        """Write the run's Chrome-trace JSON (with the flat metrics snapshot
+        embedded). Callable any time after ``run()``; open spans are closed
+        first so the export always has matched begin/end pairs."""
+        self.obs.finish(self.env.now)
+        self.obs.export(path)
 
 
 class SyncOrchestrator(BaseOrchestrator):
@@ -516,6 +563,7 @@ class SyncOrchestrator(BaseOrchestrator):
 
     def run(self, rounds: int) -> Dict:
         self._wire()
+        tr = self.env.tracer
         submitted: Dict[int, set] = {}
         cids: Dict[int, set] = {}
         for r in range(1, rounds + 1):
@@ -525,12 +573,14 @@ class SyncOrchestrator(BaseOrchestrator):
             t_round = self.env.now
             submitted[r] = set()
             cids[r] = set()
+            sub_t: Dict[str, float] = {}   # silo -> submission time (spans)
             deadline = (self.env.now + self.fed.round_deadline_s
                         if self.fed.round_deadline_s > 0 else None)
 
-            def on_submit(silo, cid, r=r):
+            def on_submit(silo, cid, r=r, sub_t=sub_t):
                 submitted[r].add(silo.silo_id)
                 cids[r].add(cid)
+                sub_t.setdefault(silo.silo_id, self.env.now)
 
             for s in self.live():
                 s.pull_and_merge()
@@ -545,6 +595,14 @@ class SyncOrchestrator(BaseOrchestrator):
                     and all(c in self.contract.models for c in cids[r])
 
             self._run_window(deadline, barrier)
+            if tr.enabled:
+                # a silo that submitted early sat at the barrier until the
+                # window closed: chain propagation + straggler wait
+                t_close = self.env.now
+                for sid, ts in sub_t.items():
+                    if t_close > ts:
+                        tr.span_at("phase.chain-wait", f"{sid}/phases",
+                                   ts, t_close, round=r)
             # scoring phase
             self._net_phase(r, "score")
             assignments = self.ledger.submit("orchestrator", "start_scoring",
@@ -582,6 +640,10 @@ class SyncOrchestrator(BaseOrchestrator):
                 s.rounds_done = r
                 s.checkpoint()
             self._mark_round(r)
+            if tr.enabled:
+                tr.span_at("phase.round", "orchestrator/rounds",
+                           t_round, self.env.now, round=r)
+        self._finish_obs()
         return self.summary()
 
     def _score_multikrum(self, r: int):
@@ -602,8 +664,7 @@ class SyncOrchestrator(BaseOrchestrator):
                 decoded.append(dm)
                 reachable.append(e)
             except (KeyError, IOError):
-                self.env.trace.append(
-                    (self.env.now, f"multikrum:fetch-fail:{e.cid[:8]}"))
+                self.env.emit(obsev.multikrum_fetch_fail(e.cid))
         entries = reachable
         if len(entries) < 2:
             return
@@ -619,8 +680,7 @@ class SyncOrchestrator(BaseOrchestrator):
                     led.submit(sid, "submit_score", cid=e.cid,
                                score=float(sc), logical_time=self.env.now)
                 except PermissionError:
-                    self.env.trace.append(
-                        (self.env.now, f"{sid}:tx-revert:submit_score"))
+                    self.env.emit(obsev.tx_revert(sid, "submit_score"))
 
     def _reassign_dead_scorers(self, r: int, t_round: float):
         # deadline pass (paper §3.2): any assigned scorer whose heartbeat
@@ -692,4 +752,5 @@ class AsyncOrchestrator(BaseOrchestrator):
         for s in self.silos:
             self.env.schedule(0.0, lambda s=s: loop(s), f"{s.silo_id}:start")
         self.env.run()
+        self._finish_obs()
         return self.summary()

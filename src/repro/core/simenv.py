@@ -21,7 +21,51 @@ from __future__ import annotations
 
 import heapq
 import itertools
+from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.obs.tracer import NULL_TRACER
+
+
+class Trace:
+    """The env's ``(time, note)`` event log. ``cap > 0`` bounds it as a
+    ring buffer: appends beyond the cap evict oldest-first (O(1)), with the
+    eviction count kept in ``dropped`` — thousand-silo sweeps stay bounded
+    while recent history remains greppable. Notes are plain strings or
+    ``repro.obs.events.TraceEvent``s (string-compatible)."""
+
+    __slots__ = ("_items", "cap", "dropped")
+
+    def __init__(self, cap: int = 0):
+        self._items: deque = deque()
+        self.cap = int(cap)
+        self.dropped = 0
+
+    def append(self, item) -> None:
+        self._items.append(item)
+        if self.cap > 0 and len(self._items) > self.cap:
+            self._items.popleft()
+            self.dropped += 1
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def __bool__(self) -> bool:
+        return bool(self._items)
+
+    def __iter__(self):
+        return iter(self._items)
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return list(self._items)[i]
+        return self._items[i]
+
+    def clear(self) -> None:
+        self._items.clear()
+
+    def __repr__(self) -> str:
+        return f"Trace({list(self._items)!r}, cap={self.cap})"
 
 
 class Event:
@@ -42,12 +86,22 @@ class Event:
 
 
 class SimEnv:
-    def __init__(self):
+    def __init__(self, trace_cap: int = 0):
         self.now = 0.0
         self._q: List[Tuple[float, int, Event]] = []
         self._counter = itertools.count()
         self._keyed: Dict[Any, Event] = {}
-        self.trace: List[Tuple[float, str]] = []
+        self.trace = Trace(cap=trace_cap)
+        # span/instant tracer (repro.obs): the shared no-op unless the
+        # orchestrator installs a real one (ObsConfig.enabled)
+        self.tracer = NULL_TRACER
+
+    def emit(self, event) -> None:
+        """Record a typed TraceEvent (or plain string) at the current
+        simulated time: appended to ``trace`` for legacy greps and
+        forwarded to the tracer as a structured instant."""
+        self.trace.append((self.now, event))
+        self.tracer.record(self.now, event)
 
     def schedule(self, delay: float, fn: Callable, note: str = "",
                  key: Any = None) -> Event:

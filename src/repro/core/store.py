@@ -30,6 +30,8 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.obs.metrics import StatsView
+
 CHUNK_BYTES = 1 << 20  # 1 MiB blocks, IPFS-style
 DECODED_CACHE_MAX = 64  # CIDs kept in each node's decoded-model cache
 
@@ -112,11 +114,7 @@ class StoreNode:
         self._wire_decoder: Optional[Callable] = None
         self._prefetched: set = set()
         self._pending_net_time = 0.0
-        self.stats = {"puts": 0, "gets": 0, "peer_fetches": 0,
-                      "bytes_stored": 0, "bytes_fetched": 0,
-                      "decodes": 0, "decode_hits": 0,
-                      "bytes_in": 0, "bytes_out": 0, "fetch_time": 0.0,
-                      "replica_hits": 0, "prefetch_hits": 0}
+        self.stats = StatsView("store", node_id)
         if root:
             os.makedirs(root, exist_ok=True)
 

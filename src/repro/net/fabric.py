@@ -33,6 +33,8 @@ from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
 from repro.net.topology import Topology
+from repro.obs import events as obsev
+from repro.obs.metrics import StatsView
 
 _CID_W = 12  # cid prefix width in trace notes
 
@@ -80,9 +82,7 @@ class NetFabric:
         self._subscribers: List[Callable[[str, str, int], None]] = []
         self._inflight: Dict[Any, Tuple[str, str]] = {} # key -> (src, dst)
         self.trace: List[TransferRecord] = []
-        self.stats = {"transfers": 0, "bytes": 0, "queue_wait_s": 0.0,
-                      "busy_s": 0.0, "reroutes": 0, "replica_serves": 0,
-                      "cancelled": 0, "chain_bytes": 0}
+        self.stats = StatsView("fabric")
 
     # -- membership --------------------------------------------------------- #
     def register_node(self, node_id: str) -> None:
@@ -161,8 +161,7 @@ class NetFabric:
             for nid in group:
                 gmap[nid] = gi
         self._groups = gmap
-        self.env.trace.append((self.env.now, "net:partition:" + "|".join(
-            ",".join(sorted(g)) for g in groups)))
+        self.env.emit(obsev.net_partition(groups))
 
     def isolate(self, node_id: str) -> None:
         """Partition one node away from everyone else. Cumulative: nodes
@@ -171,11 +170,11 @@ class NetFabric:
             else {n: 0 for n in self._nodes}
         gmap[node_id] = max(gmap.values(), default=0) + 1
         self._groups = gmap
-        self.env.trace.append((self.env.now, f"net:isolate:{node_id}"))
+        self.env.emit(obsev.net_isolate(node_id))
 
     def heal(self) -> None:
         self._groups = None
-        self.env.trace.append((self.env.now, "net:heal"))
+        self.env.emit(obsev.net_heal())
 
     def node_down(self, node_id: str) -> None:
         """Churn a node out; every in-flight transfer touching it is
@@ -186,19 +185,18 @@ class NetFabric:
                 if self.env.cancel(key):
                     self.stats["cancelled"] += 1
                 del self._inflight[key]
-        self.env.trace.append((self.env.now, f"net:down:{node_id}"))
+        self.env.emit(obsev.net_down(node_id))
 
     def node_up(self, node_id: str) -> None:
         self._down.discard(node_id)
-        self.env.trace.append((self.env.now, f"net:up:{node_id}"))
+        self.env.emit(obsev.net_up(node_id))
 
     def degrade_link(self, a: str, b: str, factor: float) -> None:
         """Scale a link's bandwidth by 1/factor (slow-link straggler)."""
         if factor <= 0:
             raise ValueError("degrade factor must be > 0")
         self._degraded[_link_key(a, b)] = float(factor)
-        self.env.trace.append((self.env.now,
-                               f"net:slow-link:{a}~{b}:x{factor:g}"))
+        self.env.emit(obsev.net_slow_link(a, b, factor))
 
     # -- transfer scheduling ------------------------------------------------ #
     def _cost_parts(self, src: str, dst: str,
@@ -229,22 +227,33 @@ class NetFabric:
             # *transmission* time occupies the lane (propagation latency is
             # concurrent, not head-of-line blocking). A fork storm therefore
             # never starves model transfers off the link.
+            lane = "ctl"
             start = max(self.env.now, self._busy.get(ctl, 0.0))
             self._busy[ctl] = start + ser
             duration = ser + lat        # the receiver still waits for both
         elif kind in _BACKGROUND:
             # background waits for every lane; demand never waits for it
+            lane = "bg"
             start = max(self.env.now, self._busy.get(fg, 0.0),
                         self._busy.get(bg, 0.0), self._busy.get(ctl, 0.0))
             self._busy[bg] = start + duration
         else:
+            lane = "fg"
             start = max(self.env.now, self._busy.get(fg, 0.0))
             self._busy[fg] = start + duration
         end = start + duration
         self.trace.append(TransferRecord(kind, src, dst, cid, int(nbytes),
                                          start, end))
-        self.env.trace.append(
-            (self.env.now, f"net:{kind}:{src}->{dst}:{cid[:_CID_W]}"))
+        tr = self.env.tracer
+        if tr.enabled:
+            # span = lane *occupancy*; ctl spans end at start+ser so
+            # pipelined consensus messages never overlap within the lane
+            occ_end = start + ser if kind == "chain" else end
+            tr.span_at(f"net.{kind}", f"link/{lk[0]}~{lk[1]}/{lane}",
+                       start, occ_end, src=src, dst=dst, cid=cid[:_CID_W],
+                       nbytes=int(nbytes))
+        self.env.emit(obsev.net_transfer(kind, src, dst, cid, lane=lane,
+                                         nbytes=int(nbytes)))
         self.stats["transfers"] += 1
         self.stats["bytes"] += int(nbytes)
         self.stats["queue_wait_s"] += start - self.env.now

@@ -34,6 +34,7 @@ from typing import Callable, Iterable, Optional, Sequence
 
 from repro.config import FAULT_ACTIONS, FaultScenario
 from repro.net.fabric import NetFabric
+from repro.obs import events as obsev
 
 ACTIONS = FAULT_ACTIONS
 
@@ -103,8 +104,7 @@ def apply_scenario(fabric: NetFabric, sc: FaultScenario, *,
     elif sc.action == "byzantine_sealer":
         if chain is not None and sc.node in chain.replicas:
             chain.replicas[sc.node].byzantine = "equivocate"
-            fabric.env.trace.append(
-                (fabric.env.now, f"chain:byzantine:{sc.node}"))
+            fabric.env.emit(obsev.chain_byzantine(sc.node))
     elif sc.action == "kill":
         # crash, not clean shutdown: in-flight transfers cancelled *and* the
         # replica forgets everything it hasn't written to its WAL segment

@@ -26,6 +26,7 @@ from typing import List, Optional
 from repro.core import wire
 from repro.core.store import deserialize_pytree
 from repro.net.fabric import NetFabric, UnreachableError
+from repro.obs.metrics import StatsView
 
 MAX_CHAIN = 64  # defensive bound on base-chain walks
 
@@ -35,8 +36,7 @@ class GossipReplicator:
         self.fabric = fabric
         self.network = network          # StoreNetwork (duck-typed: .nodes)
         self.factor = int(factor)
-        self.stats = {"pushes": 0, "landed": 0, "skipped": 0, "failed": 0,
-                      "base_pushes": 0, "chain_unresolved": 0}
+        self.stats = StatsView("gossip")
         # cid -> base_cid memo: content addressing makes payloads immutable,
         # so each link's base is parsed from its (model-sized) payload at
         # most once per replicator, not on every announce of the chain

@@ -21,6 +21,7 @@ from __future__ import annotations
 from typing import Callable, Optional
 
 from repro.net.fabric import NetFabric, UnreachableError
+from repro.obs.metrics import StatsView
 
 
 class Prefetcher:
@@ -33,7 +34,7 @@ class Prefetcher:
         # through that node's decoded cache)
         self.decoder = decoder
         self.delay_s = float(delay_s)
-        self.stats = {"issued": 0, "completed": 0, "skipped": 0, "failed": 0}
+        self.stats = StatsView("prefetch")
 
     # fabric announce subscriber ------------------------------------------- #
     def on_announce(self, cid: str, owner: str, nbytes: int,
@@ -89,7 +90,7 @@ class Prefetcher:
             self.stats["failed"] += 1
 
     def hit_stats(self) -> dict:
-        hits = sum(n.stats.get("prefetch_hits", 0)
+        hits = sum(n.stats["prefetch_hits"]
                    for n in self.network.nodes.values())
         done = max(1, self.stats["completed"])
         return {**self.stats, "hits": hits,

@@ -1,0 +1,73 @@
+"""Benchmarks may only read *declared* stats keys (satellite of repro.obs).
+
+Before the metrics registry, benchmarks guessed at stats keys with
+``stats.get("chain_bytes", 0)`` — a typo'd key silently read 0 and the
+number looked plausible. Now every component's key set is declared in
+``repro.obs.metrics.SCHEMAS`` and ``StatsView`` raises on anything else;
+this test lints the benchmark sources so the guessing never comes back.
+"""
+import pathlib
+import re
+
+from repro.obs.metrics import SCHEMAS, declared_keys
+
+BENCH_DIR = pathlib.Path(__file__).resolve().parent.parent / "benchmarks"
+
+_STATS_INDEX = re.compile(r"\.stats\[\s*[\"'](\w+)[\"']\s*\]")
+_STATS_GET = re.compile(r"\.stats\.get\(")
+_TOTALS = re.compile(r"\.totals\(\s*[\"'](\w+)[\"']\s*\)")
+
+
+def _bench_sources():
+    files = sorted(BENCH_DIR.glob("*.py"))
+    assert files, f"no benchmark sources under {BENCH_DIR}"
+    return [(p, p.read_text()) for p in files]
+
+
+def test_benchmarks_only_index_declared_stats_keys():
+    declared = declared_keys()
+    undeclared = []
+    for path, src in _bench_sources():
+        for m in _STATS_INDEX.finditer(src):
+            if m.group(1) not in declared:
+                line = src[:m.start()].count("\n") + 1
+                undeclared.append(f"{path.name}:{line}: {m.group(1)!r}")
+    assert not undeclared, (
+        "benchmarks read stats keys missing from repro.obs.metrics.SCHEMAS:\n"
+        + "\n".join(undeclared))
+
+
+def test_benchmarks_never_use_stats_get_defaults():
+    offenders = []
+    for path, src in _bench_sources():
+        for m in _STATS_GET.finditer(src):
+            line = src[:m.start()].count("\n") + 1
+            offenders.append(f"{path.name}:{line}")
+    assert not offenders, (
+        ".stats.get(...) guesses at keys with silent defaults; index the "
+        "declared StatsView instead:\n" + "\n".join(offenders))
+
+
+def test_benchmark_chain_totals_are_declared_replica_keys():
+    replica_keys = set(SCHEMAS["replica"])
+    undeclared = []
+    for path, src in _bench_sources():
+        for m in _TOTALS.finditer(src):
+            if m.group(1) not in replica_keys:
+                line = src[:m.start()].count("\n") + 1
+                undeclared.append(f"{path.name}:{line}: {m.group(1)!r}")
+    assert not undeclared, (
+        "chain.totals(...) keys missing from the replica schema:\n"
+        + "\n".join(undeclared))
+
+
+def test_src_tree_has_no_stats_get_defaults():
+    src_dir = BENCH_DIR.parent / "src" / "repro"
+    offenders = []
+    for path in sorted(src_dir.rglob("*.py")):
+        src = path.read_text()
+        for m in _STATS_GET.finditer(src):
+            line = src[:m.start()].count("\n") + 1
+            offenders.append(f"{path.relative_to(src_dir)}:{line}")
+    assert not offenders, (
+        "src tree reintroduced .stats.get(...):\n" + "\n".join(offenders))

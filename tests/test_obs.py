@@ -1,0 +1,387 @@
+"""Unit tests for repro.obs: typed events, the trace ring buffer, the
+metrics registry, the span tracer, and the Chrome-trace exporter.
+
+The legacy-string contract is the load-bearing part: TraceEvents must be
+byte-identical to the old ``env.trace`` f-strings under str()/==/startswith,
+so every pre-obs trace-grepping consumer keeps working.
+"""
+import json
+import random
+
+import pytest
+
+from repro.config import ObsConfig
+from repro.core.simenv import SimEnv, Trace
+from repro.obs import events as obsev
+from repro.obs.export import (chrome_trace, validate_chrome_trace,
+                              write_chrome_trace)
+from repro.obs.metrics import (SCHEMAS, Histogram, MetricsRegistry,
+                               StatsView, declared_keys, zero_for)
+from repro.obs.tracer import NULL_TRACER, Tracer
+
+
+# --------------------------------------------------------------------------- #
+# TraceEvent string compatibility
+# --------------------------------------------------------------------------- #
+
+LEGACY_RENDERINGS = [
+    (obsev.net_partition([("b", "a"), ("c",)]), "net:partition:a,b|c"),
+    (obsev.net_isolate("silo1"), "net:isolate:silo1"),
+    (obsev.net_heal(), "net:heal"),
+    (obsev.net_down("silo2"), "net:down:silo2"),
+    (obsev.net_up("silo2"), "net:up:silo2"),
+    (obsev.net_slow_link("a", "b", 4.0), "net:slow-link:a~b:x4"),
+    (obsev.net_slow_link("a", "b", 2.5), "net:slow-link:a~b:x2.5"),
+    (obsev.net_transfer("fetch", "a", "b", "c" * 20),
+     "net:fetch:a->b:" + "c" * 12),
+    (obsev.chain_kill("silo0"), "chain:kill:silo0"),
+    (obsev.chain_restart("silo0", 7), "chain:restart:silo0:wal=7"),
+    (obsev.chain_byzantine("silo1"), "chain:byzantine:silo1"),
+    (obsev.tx_revert("silo3", "submit_score"),
+     "silo3:tx-revert:submit_score"),
+    (obsev.pull_fail("silo0", "d" * 20), "silo0:pull-fail:" + "d" * 8),
+    (obsev.score_fetch_fail("silo0", "e" * 20),
+     "silo0:score-fetch-fail:" + "e" * 8),
+    (obsev.multikrum_fetch_fail("f" * 20),
+     "multikrum:fetch-fail:" + "f" * 8),
+]
+
+
+@pytest.mark.parametrize("ev,legacy", LEGACY_RENDERINGS,
+                         ids=[s for _, s in LEGACY_RENDERINGS])
+def test_trace_event_legacy_string_contract(ev, legacy):
+    assert str(ev) == legacy
+    assert ev == legacy                       # __eq__ against str
+    assert not (ev != legacy)
+    assert hash(ev) == hash(legacy)           # interchangeable in sets
+    assert ev in {legacy}
+    prefix = legacy.split(":", 1)[0] + ":"
+    assert ev.startswith(prefix)
+    assert not ev.startswith("nope:")
+
+
+def test_trace_event_typed_side():
+    ev = obsev.net_transfer("prefetch", "a", "b", "x" * 30, lane="bg",
+                            nbytes=1234)
+    assert ev.kind == "net.prefetch"
+    assert ev.lane == "bg"
+    assert ev.attrs == {"src": "a", "dst": "b", "cid": "x" * 12,
+                        "nbytes": 1234}
+    assert ev != obsev.net_transfer("fetch", "a", "b", "x" * 30)
+    assert (ev == 42) is False                # NotImplemented -> False
+
+
+# --------------------------------------------------------------------------- #
+# Trace ring buffer (satellite a)
+# --------------------------------------------------------------------------- #
+
+def test_trace_unbounded_by_default():
+    tr = Trace()
+    for i in range(100):
+        tr.append((float(i), f"n{i}"))
+    assert len(tr) == 100 and tr.dropped == 0
+    assert tr[0] == (0.0, "n0") and tr[-1] == (99.0, "n99")
+    assert tr[2:4] == [(2.0, "n2"), (3.0, "n3")]
+
+
+def test_trace_ring_cap_drops_oldest_first():
+    tr = Trace(cap=3)
+    for i in range(7):
+        tr.append((float(i), f"n{i}"))
+    assert len(tr) == 3
+    assert tr.dropped == 4
+    # oldest evicted first: only the newest cap entries remain, in order
+    assert [n for _, n in tr] == ["n4", "n5", "n6"]
+
+
+def test_simenv_trace_cap_and_emit():
+    env = SimEnv(trace_cap=2)
+    for i in range(4):
+        env.emit(obsev.net_up(f"s{i}"))
+    assert [str(n) for _, n in env.trace] == ["net:up:s2", "net:up:s3"]
+    assert env.trace.dropped == 2
+    # scheduled-event notes go through the same ring
+    env.schedule(1.0, lambda: None, "tick")
+    env.run()
+    assert [str(n) for _, n in env.trace] == ["net:up:s3", "tick"]
+
+
+def test_simenv_emit_feeds_installed_tracer():
+    env = SimEnv()
+    env.tracer = Tracer()
+    env.emit(obsev.chain_kill("silo1"))
+    assert env.tracer.events == [
+        (0.0, "chain.kill", "silo1/events",
+         {"text": "chain:kill:silo1"})]
+
+
+# --------------------------------------------------------------------------- #
+# StatsView / MetricsRegistry (satellite b + tentpole 2)
+# --------------------------------------------------------------------------- #
+
+def test_statsview_zero_defaults_and_schema():
+    sv = StatsView("fabric")
+    assert sv["transfers"] == 0
+    assert sv["queue_wait_s"] == 0.0          # seconds kind -> float zero
+    sv["transfers"] += 3
+    assert sv["transfers"] == 3
+    assert dict(sv)["transfers"] == 3
+    assert set(sv) == set(SCHEMAS["fabric"])  # iteration covers the schema
+
+
+def test_statsview_rejects_undeclared_keys():
+    sv = StatsView("gossip")
+    with pytest.raises(KeyError):
+        sv["not_a_key"]
+    with pytest.raises(KeyError):
+        sv["not_a_key"] = 1
+    with pytest.raises(TypeError):
+        del sv["pushes"]
+
+
+def test_statsview_equals_plain_dict():
+    sv = StatsView("prefetch")
+    sv["issued"] = 2
+    legacy = {"issued": 2, "completed": 0, "skipped": 0, "failed": 0}
+    assert sv == legacy
+    assert {**sv, "extra": 1}["issued"] == 2  # mapping unpacking works
+
+
+def test_declared_keys_and_zero_for():
+    keys = declared_keys()
+    assert "fetch_time" in keys and "reorgs" in keys
+    assert "not_a_key" not in keys
+    assert zero_for("seconds") == 0.0 and zero_for("counter") == 0
+
+
+def test_registry_adopt_view_and_snapshot():
+    reg = MetricsRegistry()
+    a = StatsView("store", "silo0")
+    reg.adopt(a)
+    a["puts"] = 5
+    snap = reg.snapshot()
+    assert snap["store"]["silo0"]["puts"] == 5
+    flat = reg.flat()
+    assert flat["store/silo0/puts"] == 5
+    # adopting the SAME object again is idempotent ...
+    reg.adopt(a)
+    # ... but a different object under the same identity is a wiring bug
+    with pytest.raises(ValueError):
+        reg.adopt(StatsView("store", "silo0"))
+    # get-or-create returns the adopted instance
+    assert reg.view("store", "silo0") is a
+
+
+def test_histogram_buckets_and_flat():
+    reg = MetricsRegistry()
+    h = reg.histogram("span:phase.train")
+    for v in (0.5, 1.5, 3.0, 0.0):
+        h.observe(v)
+    s = h.summary()
+    assert s["count"] == 4 and s["min"] == 0.0 and s["max"] == 3.0
+    assert sum(s["buckets"].values()) == 4
+    assert reg.flat()["hist/span:phase.train/count"] == 4
+
+
+def test_histogram_bucket_labels():
+    assert Histogram.bucket_label(0.0) == "<=0"
+    assert Histogram.bucket_label(1.0) == "<=2^0"
+    assert Histogram.bucket_label(3.0) == "<=2^2"
+
+
+# --------------------------------------------------------------------------- #
+# Tracer
+# --------------------------------------------------------------------------- #
+
+def test_tracer_begin_end_and_span_at():
+    tr = Tracer()
+    h = tr.begin("phase.train", "silo0/phases", 1.0, round=1)
+    assert tr.open_count == 1
+    tr.end(h, 3.0)
+    tr.end(h, 9.0)                            # double-end is a no-op
+    tr.span_at("phase.score", "silo0/phases", 3.0, 4.5, k=2)
+    assert tr.open_count == 0
+    assert [s.kind for s in tr.spans] == ["phase.train", "phase.score"]
+    assert tr.spans[0].duration == pytest.approx(2.0)
+    assert tr.spans[0].attrs == {"round": 1}
+    assert tr.spans_of("phase.score")[0].attrs == {"k": 2}
+
+
+def test_tracer_end_clamps_negative_duration():
+    tr = Tracer()
+    h = tr.begin("x", "t/a", 5.0)
+    tr.end(h, 2.0)                            # t1 < t0: clamped, never < 0
+    assert tr.spans[0].duration == 0.0
+
+
+def test_tracer_close_track_marks_aborted():
+    tr = Tracer()
+    tr.begin("phase.train", "silo2/phases", 1.0)
+    other = tr.begin("phase.train", "silo3/phases", 1.0)
+    tr.close_track("silo2/phases", 2.5)
+    assert tr.open_count == 1                 # only silo2's span closed
+    assert tr.spans[0].attrs["aborted"] is True
+    tr.finish(9.0)
+    assert tr.open_count == 0
+    assert tr.spans[1].attrs["truncated"] is True
+    assert other.closed
+
+
+def test_tracer_feeds_registry_histograms():
+    reg = MetricsRegistry()
+    tr = Tracer(registry=reg)
+    tr.span_at("phase.train", "s/p", 0.0, 2.0)
+    tr.span_at("phase.train", "s/p", 2.0, 3.0)
+    assert reg.histogram("span:phase.train").summary()["count"] == 2
+
+
+def test_null_tracer_is_inert():
+    assert NULL_TRACER.enabled is False
+    assert NULL_TRACER.begin("x", "t", 0.0) is None
+    NULL_TRACER.end(None, 1.0)
+    NULL_TRACER.span_at("x", "t", 0.0, 1.0)
+    NULL_TRACER.record(0.0, "note")
+    NULL_TRACER.finish(1.0)                   # all no-ops, nothing raised
+
+
+# --------------------------------------------------------------------------- #
+# Chrome-trace export
+# --------------------------------------------------------------------------- #
+
+def _synthetic_tracer():
+    tr = Tracer()
+    tr.span_at("phase.train", "silo0/phases", 0.0, 1.5, round=1)
+    tr.span_at("phase.score", "silo0/phases", 1.5, 2.0, k=3)
+    tr.span_at("net.fetch", "link/a~b/fg", 0.2, 0.9, src="a", dst="b",
+               nbytes=1024)
+    tr.event("chain.seal", "silo0/chain", 0.7, hash="abc123")
+    return tr
+
+
+def test_chrome_trace_structure_and_validation():
+    doc = chrome_trace(_synthetic_tracer())
+    assert validate_chrome_trace(doc) == []
+    evs = doc["traceEvents"]
+    xs = [e for e in evs if e["ph"] == "X"]
+    assert len(xs) == 3
+    train = next(e for e in xs if e["name"] == "phase.train")
+    assert train["ts"] == 0.0 and train["dur"] == pytest.approx(1.5e6)
+    assert train["cat"] == "phase"
+    # metadata names every process and thread
+    procs = {e["args"]["name"] for e in evs
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    threads = {e["args"]["name"] for e in evs
+               if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert procs == {"silo0", "link"}
+    assert threads == {"phases", "a~b/fg", "chain"}
+    insts = [e for e in evs if e["ph"] == "i"]
+    assert insts[0]["name"] == "chain.seal" and insts[0]["s"] == "t"
+
+
+def test_chrome_trace_args_cleaned():
+    tr = Tracer()
+    tr.span_at("x", "p/t", 0.0, 1.0, obj=object(), ok=True, n=None)
+    doc = chrome_trace(tr)
+    args = [e for e in doc["traceEvents"] if e["ph"] == "X"][0]["args"]
+    assert isinstance(args["obj"], str) and args["ok"] is True
+    assert args["n"] is None
+
+
+def test_write_chrome_trace_roundtrip_with_metrics(tmp_path):
+    path = tmp_path / "t.json"
+    doc = write_chrome_trace(str(path), _synthetic_tracer(),
+                             metrics={"fabric/-/bytes": 7})
+    loaded = json.loads(path.read_text())
+    assert loaded == json.loads(json.dumps(doc))
+    assert loaded["metrics"]["fabric/-/bytes"] == 7
+    assert validate_chrome_trace(loaded) == []
+
+
+def test_validate_catches_malformations():
+    assert validate_chrome_trace([]) != []
+    bad = {"traceEvents": [
+        {"name": "a", "ph": "X", "pid": 1, "tid": 1, "ts": 5.0, "dur": -1},
+        {"name": "b", "ph": "X", "pid": 1, "tid": 1, "ts": 1.0, "dur": 0},
+        {"name": "c", "ph": "Q", "pid": 1, "tid": 1, "ts": 0},
+        {"name": "d", "ph": "i", "pid": 1, "tid": 1, "ts": 9.0, "s": "z"},
+    ]}
+    problems = validate_chrome_trace(bad)
+    assert any("bad dur" in p for p in problems)
+    assert any("not monotone" in p for p in problems)
+    assert any("unknown phase" in p for p in problems)
+    assert any("bad scope" in p for p in problems)
+    assert any("no process_name" in p for p in problems)
+
+
+# --------------------------------------------------------------------------- #
+# Property test (satellite d): random op sequences always export a valid,
+# matched-pairs, monotone trace. Uses hypothesis when the container has it;
+# otherwise a fixed-seed random sweep of the same property.
+# --------------------------------------------------------------------------- #
+
+def _run_ops(ops):
+    """Interpret an op sequence against a Tracer on a monotone sim clock."""
+    tr = Tracer()
+    handles = []
+    t = 0.0
+    for op, arg in ops:
+        t += 0.25
+        if op == "begin":
+            handles.append(tr.begin("phase.x", f"n{arg}/phases", t))
+        elif op == "end" and handles:
+            tr.end(handles.pop(arg % len(handles)), t)
+        elif op == "span":
+            tr.span_at("net.fetch", f"link/a~n{arg}/fg", t, t + 0.1,
+                       src="a", dst=f"n{arg}")
+        elif op == "event":
+            tr.event("chain.seal", f"n{arg}/chain", t)
+        elif op == "close":
+            tr.close_track(f"n{arg}/phases", t)
+    tr.finish(t + 1.0)
+    return tr
+
+
+def _assert_trace_properties(tr):
+    assert tr.open_count == 0                      # matched begin/end pairs
+    assert all(s.duration >= 0.0 for s in tr.spans)
+    doc = chrome_trace(tr)
+    assert validate_chrome_trace(doc) == []        # incl. per-track monotone ts
+
+
+OPS = ("begin", "end", "span", "event", "close")
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.tuples(st.sampled_from(OPS), st.integers(0, 3)),
+                    max_size=60))
+    def test_random_op_sequences_export_valid_traces(ops):
+        _assert_trace_properties(_run_ops(ops))
+except ImportError:
+    @pytest.mark.parametrize("seed", range(25))
+    def test_random_op_sequences_export_valid_traces(seed):
+        rng = random.Random(seed)
+        ops = [(rng.choice(OPS), rng.randrange(4))
+               for _ in range(rng.randrange(60))]
+        _assert_trace_properties(_run_ops(ops))
+
+
+# --------------------------------------------------------------------------- #
+# ObsConfig plumbing
+# --------------------------------------------------------------------------- #
+
+def test_obs_disabled_by_default_uses_null_tracer():
+    from repro.obs import Observability
+    obs = Observability()
+    assert obs.enabled is False and obs.tracer is NULL_TRACER
+    obs = Observability(ObsConfig(enabled=True))
+    assert obs.enabled and isinstance(obs.tracer, Tracer)
+    assert obs.tracer.registry is obs.registry
+
+
+def test_obs_adopt_ignores_plain_dicts():
+    from repro.obs import Observability
+    obs = Observability(ObsConfig(enabled=True))
+    obs.adopt({"not": "a-view"})              # legacy shim: silently ignored
+    assert obs.registry.views() == {}
