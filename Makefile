@@ -3,13 +3,19 @@
 PYTHON ?= python
 PYTEST_ARGS ?=
 
-.PHONY: verify netbench kernelbench scorebench chainbench recoverybench trace
+.PHONY: verify netbench scalebench kernelbench scorebench chainbench \
+	recoverybench trace
 
 verify:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q $(PYTEST_ARGS)
 
 netbench:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.netbench --quick
+
+# Thousand-silo scale sweep only (batched vs reference engine, fair-share
+# fabric): reruns the sweep and merges the "scale" section into BENCH_net.json
+scalebench:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.netbench --quick --scale
 
 kernelbench:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.kernelbench

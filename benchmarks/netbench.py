@@ -199,6 +199,133 @@ def run_failover(quick: bool) -> Dict:
             "cancelled_inflight": orch.fabric.stats["cancelled"]}
 
 
+def _scale_row(n_silos: int, rounds: int, *, reference: bool,
+               epsilon_s: float, seed: int = 0) -> Dict:
+    """One thousand-silo-scale measurement: a synthetic announce / replicate
+    / fetch / chain workload driven straight onto a fair-share fabric (no ML
+    — this measures the *event engine* and the share allocator). Per silo
+    per round: gossip-replicate its fresh model to 3 peers, fetch one hot
+    CID through congestion-aware ``best_provider``, gossip 2 consensus
+    blocks, and re-arm a keyed watchdog (cancel-and-replace churn, the lazy
+    deletion the compactor exists for). ``reference=True`` runs the
+    identical workload on the pre-batching engine — the ``speedup_100``
+    baseline."""
+    import random
+    import time as _time
+
+    from repro.core.simenv import SimEnv
+    from repro.net.fabric import NetFabric, UnreachableError
+    from repro.net.topology import MIB, Topology
+
+    env = SimEnv(batch_epsilon_s=0.0 if reference else epsilon_s,
+                 reference=reference)
+    fab = NetFabric(env, Topology("wan-heterogeneous", seed=seed), seed=seed,
+                    bandwidth_model="fair-share", trace_cap=100_000)
+    rng = random.Random(0x5CA1E ^ seed)
+    silos = [f"s{i:04d}" for i in range(n_silos)]
+    for s in silos:
+        fab.register_node(s)
+    model_b = 1 << 20                   # one announced model payload
+    block_b = 64 << 10                  # one consensus block
+    hot = max(1, n_silos // 20)         # fan-in: everyone fetches these
+    # peer picks are pre-drawn so the timed region holds only engine +
+    # fabric work (and so both engines see the identical op sequence)
+    repl_peers = [rng.sample([p for p in range(n_silos) if p != i], 2)
+                  for i in range(n_silos)]
+    chain_peers = [rng.sample([p for p in range(n_silos) if p != i], 2)
+                   for i in range(n_silos)]
+    fetch_pick = [[rng.randrange(hot) for i in range(n_silos)]
+                  for _ in range(rounds)]
+    peak = {"flows": 0}
+    misses = {"n": 0}
+
+    def tick(r: int, i: int) -> None:
+        me = silos[i]
+        cid = f"m{r}:{i}"
+        fab.publish(cid, me, model_b)
+        for p in repl_peers[i]:
+            peer = silos[p]
+            fab.transfer_async(me, peer, cid, model_b,
+                               lambda c=cid, d=peer: fab.add_provider(c, d),
+                               kind="replicate", key=("replicate", peer, cid))
+        if r > 0:
+            want = f"m{r - 1}:{fetch_pick[r][i]}"
+            src = fab.best_provider(me, want)
+            if src is None:
+                misses["n"] += 1
+            else:
+                try:
+                    fab.transfer_async(src, me, want, model_b, lambda: None,
+                                       kind="fetch", key=("fetch", me, want))
+                except UnreachableError:
+                    misses["n"] += 1
+        for p in chain_peers[i]:
+            fab.transfer_async(me, silos[p], f"b{r}:{i}", block_b,
+                               lambda: None, kind="chain",
+                               key=("chain", silos[p], f"b{r}:{i}"))
+        # keyed watchdog, re-armed every round: each re-arm cancels the
+        # previous round's event in place (lazy-deletion churn)
+        env.schedule(5.0, lambda: None, key=("wd", i))
+        peak["flows"] = max(peak["flows"], fab.flow_count)
+
+    for r in range(rounds):
+        for i in range(n_silos):
+            env.schedule(r * 1.0 + i * 5e-5, lambda r=r, i=i: tick(r, i))
+    t0 = _time.perf_counter()
+    env.run()
+    wall = _time.perf_counter() - t0
+
+    # fairness over the demand class: Jain index of landed fetch rates
+    rates = [rec.nbytes / MIB / (rec.t_end - rec.t_start)
+             for rec in fab.trace
+             if rec.kind == "fetch" and rec.t_end > rec.t_start]
+    jain = (sum(rates) ** 2 / (len(rates) * sum(x * x for x in rates))
+            if rates else 0.0)
+    return {
+        "silos": n_silos, "rounds": rounds,
+        "engine": "reference" if reference else "batched",
+        "epsilon_s": 0.0 if reference else epsilon_s,
+        "events": env.events_run, "batches": env.batches,
+        "compactions": env.compactions,
+        "wall_s": round(wall, 4),
+        "events_per_s": round(env.events_run / max(wall, 1e-9), 1),
+        "transfers": fab.stats["transfers"],
+        "settles": fab.stats["settles"],
+        "reschedules": fab.stats["reschedules"],
+        "cancelled": fab.stats["cancelled"],
+        "peak_flows": peak["flows"],
+        "fetch_misses": misses["n"],
+        "fairness_jain_fetch": round(jain, 4),
+        "trace_dropped": fab.trace.dropped,
+    }
+
+
+SCALE_SILOS = (10, 100, 1000)
+SCALE_EPSILON_S = 0.02
+
+
+def run_scale(quick: bool) -> Dict:
+    """The thousand-silo sweep (tentpole acceptance): batched-engine rows at
+    10 / 100 / 1000 silos plus a 100-silo reference-engine baseline;
+    ``speedup_100`` is the batched / reference events-per-second ratio on
+    the identical workload."""
+    rounds = 3 if quick else 6
+    rows = [_scale_row(n, rounds, reference=False,
+                       epsilon_s=SCALE_EPSILON_S) for n in SCALE_SILOS]
+    for row in rows:
+        emit(f"net_scale_{row['silos']}_events_per_s",
+             f"{row['events_per_s']:.0f}",
+             f"wall={row['wall_s']:.3f}s events={row['events']} "
+             f"jain={row['fairness_jain_fetch']:.3f}")
+    baseline = _scale_row(100, rounds, reference=True, epsilon_s=0.0)
+    speedup = rows[1]["events_per_s"] / max(baseline["events_per_s"], 1e-9)
+    emit("net_scale_speedup_100", f"{speedup:.2f}",
+         f"batched {rows[1]['events_per_s']:.0f} ev/s vs reference "
+         f"{baseline['events_per_s']:.0f} ev/s at 100 silos")
+    return {"rows": rows, "baseline_100_reference": baseline,
+            "epsilon_s": SCALE_EPSILON_S, "speedup_100": round(speedup, 3)}
+
+
 def run_traced(quick: bool, trace_path: str):
     """The observability scenario: a Sync federation on wan-heterogeneous
     with a kill/restart fault, run with ``ObsConfig(enabled=True)`` and
@@ -238,14 +365,35 @@ def run_traced(quick: bool, trace_path: str):
 
 
 def main(quick: bool = True, out_path: str = "BENCH_net.json",
-         trace_path: str = "", trace_only: bool = False) -> Dict:
+         trace_path: str = "", trace_only: bool = False,
+         scale: bool = False) -> Dict:
     if trace_only:
         run_traced(quick, trace_path or "trace.json")
         return {}
+    if scale:
+        # scale-only mode (`make scalebench`): rerun just the sweep and
+        # merge it into an existing artifact when one is present
+        import json
+        import os
+        sweep = run_scale(quick)
+        out = {"quick": quick}
+        if os.path.exists(out_path):
+            with open(out_path) as f:
+                out = json.load(f)
+        out["scale"] = sweep
+        write_artifact(out, out_path)
+        ok = sweep["speedup_100"] >= 5.0 \
+            and all(r["events"] > 0 for r in sweep["rows"])
+        emit_acceptance(
+            "net_scale", ok,
+            "batched engine >= 5x reference events/sec at 100 silos; "
+            "1000-silo sweep row completes")
+        return out
     with timed("netbench"):
         grid, speedup, stall_ratio = run_grid(quick)
         delta = run_delta(quick)
         failover = run_failover(quick)
+        sweep = run_scale(quick)
     out = {
         "quick": quick,
         "config": {"train_window_s": TRAIN_WINDOW_S,
@@ -258,6 +406,7 @@ def main(quick: bool = True, out_path: str = "BENCH_net.json",
         "delta": delta,
         "delta_bytes_ratio": delta["delta_bytes_ratio"],
         "failover": failover,
+        "scale": sweep,
     }
     write_artifact(out, out_path)
     if trace_path:
@@ -267,17 +416,22 @@ def main(quick: bool = True, out_path: str = "BENCH_net.json",
     ok = (stall_ratio <= 0.5 and speedup >= 0.95
           and out["prefetch_hit_rate"] > 0
           and delta["delta_bytes_ratio"] <= 0.5
-          and failover["reroutes"] >= 1 and failover["completed"])
+          and failover["reroutes"] >= 1 and failover["completed"]
+          and sweep["speedup_100"] >= 5.0)
     emit_acceptance(
         "net", ok,
         "prefetch halves async WAN fetch stall without slowing the round, "
         "hit rate > 0, int8-delta <= 0.5x WAN bytes from round 2, "
-        "failover rerouted")
+        "failover rerouted, batched engine >= 5x at 100 silos")
     return out
 
 
 if __name__ == "__main__":
-    bench_cli(main, doc=__doc__, default_out="BENCH_net.json",
-              extra=lambda ap: ap.add_argument(
-                  "--trace-only", action="store_true",
-                  help="skip the measured grid; only produce the traced run"))
+    def _extra(ap):
+        ap.add_argument("--trace-only", action="store_true",
+                        help="skip the measured grid; only produce the "
+                             "traced run")
+        ap.add_argument("--scale", action="store_true",
+                        help="run only the thousand-silo scale sweep and "
+                             "merge it into the artifact")
+    bench_cli(main, doc=__doc__, default_out="BENCH_net.json", extra=_extra)

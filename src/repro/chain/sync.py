@@ -70,6 +70,15 @@ class ChainNetwork:
         self.tx_exec_t: Dict[str, Dict[str, float]] = {}
         self.stats = StatsView("chain_net")
         self._kill_t: Dict[str, float] = {}   # node -> sim time of last kill
+        # sorted-membership memo: broadcast/resync iterate peers in sorted
+        # order for determinism, and re-sorting per sealed block is
+        # O(n log n) x blocks at thousand-replica scale
+        self._peer_order: Tuple[str, ...] = ()
+
+    def _sorted_replicas(self) -> Tuple[str, ...]:
+        if len(self._peer_order) != len(self.replicas):
+            self._peer_order = tuple(sorted(self.replicas))
+        return self._peer_order
 
     # -- membership ---------------------------------------------------------- #
     def add_replica(self, node_id: str, contract, *,
@@ -155,7 +164,7 @@ class ChainNetwork:
         if tr.enabled:
             tr.event("chain.seal", f"{src}/chain", self._now(),
                      hash=blk.hash[:12], height=blk.height)
-        peers = sorted(p for p in self.replicas if p != src)
+        peers = [p for p in self._sorted_replicas() if p != src]
         for i, peer in enumerate(peers):
             send = twin if (twin is not None and i % 2 == 1) else blk
             self._send_block(src, peer, send)
@@ -315,12 +324,12 @@ class ChainNetwork:
     # -- reconciliation / introspection --------------------------------------- #
     def resync(self) -> None:
         """Every replica announces its head to every peer (heal/up hook)."""
-        for nid in sorted(self.replicas):
+        for nid in self._sorted_replicas():
             rep = self.replicas[nid]
             if rep.head == GENESIS:
                 continue
             blk = rep.blocks[rep.head]
-            for peer in sorted(self.replicas):
+            for peer in self._sorted_replicas():
                 if peer != nid:
                     self._send_block(nid, peer, blk)
 

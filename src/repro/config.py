@@ -280,6 +280,43 @@ class NetConfig:
     # "" = in-memory replicas only ('restart' then recovers purely from peers)
     wal_dir: str = ""
     scenarios: Tuple[FaultScenario, ...] = ()
+    # bandwidth model: 'lanes' = per-link QoS lanes with busy-until
+    # serialization (the original model, byte-identical timelines);
+    # 'fair-share' = weighted max-min sharing — concurrent transfers on a
+    # link/access-port split bandwidth, strict priority across QoS classes
+    # (demand > control > scavenger), weighted max-min within a class
+    bandwidth_model: str = "lanes"
+    # > 0 bounds fabric.trace (TransferRecords) as a ring buffer with a
+    # dropped counter — same contract as SimEnv.Trace
+    transfer_trace_cap: int = 0
+    # within-class weight overrides per transfer kind for the fair-share
+    # model, e.g. (("prefetch", 2.0), ("replicate", 1.0)); unlisted kinds
+    # weigh 1.0. Weights only matter between flows of the same QoS class.
+    qos_weights: Tuple[Tuple[str, float], ...] = ()
+    # > 0 caps how many peers the async prefetcher fans a fresh CID out to
+    # (nearest-first); 0 = every store node, the original behaviour
+    prefetch_fanout: int = 0
+
+    def __post_init__(self):
+        if self.bandwidth_model not in ("lanes", "fair-share"):
+            raise ValueError(
+                f"unknown bandwidth_model {self.bandwidth_model!r} "
+                f"(choose 'lanes' or 'fair-share')")
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    """Event-engine knobs (repro.core.simenv).
+
+    The defaults are the exact-semantics configuration: zero epsilon batches
+    only same-timestamp events and the batched loop's timelines match the
+    pre-batching engine span-for-span. A positive ``batch_epsilon_s``
+    coalesces nearby timestamps into one batch-hook flush (fair-share rate
+    settles) — events still execute in exact (time, counter) order."""
+    batch_epsilon_s: float = 0.0   # batch window width in simulated seconds
+    compact_frac: float = 0.25     # compact heap at this cancelled fraction
+    compact_min: int = 64          # ... but never below this cancelled count
+    reference: bool = False        # run the pre-batching one-event loop
 
 
 @dataclass(frozen=True)
@@ -332,6 +369,8 @@ class FedConfig:
     net: Optional[NetConfig] = None
     # observability (repro.obs); None = default ObsConfig (everything off)
     obs: Optional[ObsConfig] = None
+    # event-engine knobs (repro.core.simenv); None = default SimConfig
+    sim: Optional[SimConfig] = None
 
 
 @dataclass(frozen=True)

@@ -33,7 +33,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 import jax
 import numpy as np
 
-from repro.config import SCORERS, FedConfig
+from repro.config import SCORERS, FedConfig, SimConfig
 from repro.core import wire
 from repro.core.contract import UnifyFLContract
 from repro.core.ledger import Ledger
@@ -384,7 +384,12 @@ class BaseOrchestrator:
         # observability bundle: null tracer + registry when fed.obs is unset
         # or disabled, so the hot paths stay no-op
         self.obs = Observability(fed.obs)
-        self.env = SimEnv(trace_cap=self.obs.cfg.trace_cap)
+        sim = fed.sim if fed.sim is not None else SimConfig()
+        self.env = SimEnv(trace_cap=self.obs.cfg.trace_cap,
+                          batch_epsilon_s=sim.batch_epsilon_s,
+                          compact_frac=sim.compact_frac,
+                          compact_min=sim.compact_min,
+                          reference=sim.reference)
         self.env.tracer = self.obs.tracer
         self.network = StoreNetwork()
         self.contract = UnifyFLContract(mode=fed.mode)
@@ -417,7 +422,10 @@ class BaseOrchestrator:
         net = self.fed.net
         topo = Topology(net.preset, seed=net.seed)
         self.fabric = NetFabric(self.env, topo, chunk_bytes=net.chunk_bytes,
-                                seed=net.seed)
+                                seed=net.seed,
+                                bandwidth_model=net.bandwidth_model,
+                                trace_cap=net.transfer_trace_cap,
+                                qos_weights=net.qos_weights)
         self.obs.adopt(self.fabric.stats)
         self.network.attach_fabric(self.fabric)
         if net.replication_factor > 0:
@@ -427,7 +435,8 @@ class BaseOrchestrator:
             self.fabric.subscribe(self.gossip.on_announce)
         if net.prefetch:
             self.prefetcher = Prefetcher(self.fabric, self.network,
-                                         delay_s=net.prefetch_delay_s)
+                                         delay_s=net.prefetch_delay_s,
+                                         fanout=net.prefetch_fanout)
             self.obs.adopt(self.prefetcher.stats)
             self.fabric.subscribe(self.prefetcher.on_announce)
         if net.scenarios:

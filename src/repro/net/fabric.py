@@ -26,13 +26,28 @@ prefetcher) read blocks from the source node and ask the fabric how much
 simulated time the move costs. That keeps the data plane synchronous (real
 numpy copies) while the clock stays simulated, matching how SiloRuntime
 treats compute.
+Two bandwidth models share every other mechanism (providers, faults,
+announcements, keyed cancellation):
+
+  * ``'lanes'`` (default) — the original per-link QoS-lane busy-until
+    serialization described above; timelines are byte-identical to the
+    pre-fair-share fabric.
+  * ``'fair-share'`` — every transfer is a progress-tracked *flow*;
+    concurrent flows split bandwidth by strict-priority weighted max-min
+    over the pair link and both endpoints' access ports
+    (``repro.net.fairshare``), completion events are rescheduled as flows
+    join/leave, and ``best_provider`` ranks replicas by *current* residual
+    bandwidth instead of the static link profile.
 """
 from __future__ import annotations
 
+import itertools
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
-from repro.net.topology import Topology
+from repro.core.simenv import Trace
+from repro.net import fairshare
+from repro.net.topology import MIB, Topology
 from repro.obs import events as obsev
 from repro.obs.metrics import StatsView
 
@@ -65,33 +80,60 @@ _BACKGROUND = ("prefetch", "replicate")
 
 class NetFabric:
     def __init__(self, env, topology: Topology, *,
-                 chunk_bytes: int = 1 << 20, seed: int = 0):
+                 chunk_bytes: int = 1 << 20, seed: int = 0,
+                 bandwidth_model: str = "lanes", trace_cap: int = 0,
+                 qos_weights: Tuple[Tuple[str, float], ...] = ()):
         import random
+        if bandwidth_model not in ("lanes", "fair-share"):
+            raise ValueError(f"unknown bandwidth_model {bandwidth_model!r}")
         self.env = env
         self.topology = topology
         self.chunk_bytes = int(chunk_bytes)
+        self.bandwidth_model = bandwidth_model
         self._rng = random.Random(0xFAB ^ seed)
-        self._nodes: List[str] = []
+        # membership / provider records are insertion-ordered dicts used as
+        # sets: O(1) registration and publish at thousand-node scale, with
+        # the same deterministic iteration order a list gave us
+        self._nodes: Dict[str, None] = {}
         self._down: Set[str] = set()
         self._groups: Optional[Dict[str, int]] = None   # partition map
         self._degraded: Dict[Tuple[str, str], float] = {}
         self._busy: Dict[Tuple[str, str], float] = {}   # link -> busy-until
-        self._providers: Dict[str, List[str]] = {}      # cid -> node ids
+        self._providers: Dict[str, Dict[str, None]] = {}  # cid -> node ids
         self._origin: Dict[str, str] = {}
         self._sizes: Dict[str, int] = {}
         self._subscribers: List[Callable[[str, str, int], None]] = []
         self._inflight: Dict[Any, Tuple[str, str]] = {} # key -> (src, dst)
-        self.trace: List[TransferRecord] = []
+        self.trace: Trace = Trace(cap=trace_cap)
         self.stats = StatsView("fabric")
+        self._flows: Optional[fairshare.FlowTable] = None
+        if bandwidth_model == "fair-share":
+            self._flows = fairshare.FlowTable(
+                env, pair_cap=self._pair_cap_bytes,
+                access_cap=self._access_cap_bytes,
+                kind_weights=dict(qos_weights), stats=self.stats,
+                on_rate_change=self._observe_rate)
+            self._flow_seq = itertools.count()
+            env.add_batch_hook(self._flows.settle)
 
     # -- membership --------------------------------------------------------- #
     def register_node(self, node_id: str) -> None:
         if node_id not in self._nodes:
-            self._nodes.append(node_id)
+            self._nodes[node_id] = None
 
     @property
     def nodes(self) -> List[str]:
         return list(self._nodes)
+
+    @property
+    def node_count(self) -> int:
+        """O(1) membership size (avoids copying ``nodes`` in hot loops)."""
+        return len(self._nodes)
+
+    @property
+    def flow_count(self) -> int:
+        """Flows currently in the fair-share table (0 under the lane model)."""
+        return len(self._flows) if self._flows is not None else 0
 
     def is_up(self, node_id: str) -> bool:
         return node_id not in self._down
@@ -100,21 +142,17 @@ class NetFabric:
     def publish(self, cid: str, node_id: str, nbytes: int) -> None:
         """Record a provider for ``cid`` (put / cached fetch / replica)."""
         self.register_node(node_id)
-        provs = self._providers.setdefault(cid, [])
-        if node_id not in provs:
-            provs.append(node_id)
+        self._providers.setdefault(cid, {}).setdefault(node_id)
         self._sizes[cid] = int(nbytes)
         self._origin.setdefault(cid, node_id)
 
     def add_provider(self, cid: str, node_id: str) -> None:
-        provs = self._providers.setdefault(cid, [])
-        if node_id not in provs:
-            provs.append(node_id)
+        self._providers.setdefault(cid, {}).setdefault(node_id)
 
     def drop_provider(self, cid: str, node_id: str) -> None:
         provs = self._providers.get(cid)
-        if provs and node_id in provs:
-            provs.remove(node_id)
+        if provs is not None:
+            provs.pop(node_id, None)
 
     def providers(self, cid: str) -> List[str]:
         return list(self._providers.get(cid, ()))
@@ -178,13 +216,25 @@ class NetFabric:
 
     def node_down(self, node_id: str) -> None:
         """Churn a node out; every in-flight transfer touching it is
-        cancelled through the SimEnv's keyed events."""
+        cancelled through the SimEnv's keyed events (fair-share flows are
+        also dropped from the share table, freeing their bandwidth)."""
         self._down.add(node_id)
         for key, (src, dst) in list(self._inflight.items()):
             if node_id in (src, dst):
-                if self.env.cancel(key):
+                hit = self.env.cancel(key)
+                if self._flows is not None \
+                        and self._flows.remove(key) is not None:
+                    hit = True
+                if hit:
                     self.stats["cancelled"] += 1
                 del self._inflight[key]
+        if self._flows is not None:
+            # sync-transfer flows (not in _inflight) touching the node:
+            # their bytes already moved, but stop them holding bandwidth
+            for key, f in list(self._flows.flows.items()):
+                if node_id in (f.src, f.dst):
+                    self._flows.remove(key)
+                    self.env.cancel(key)
         self.env.emit(obsev.net_down(node_id))
 
     def node_up(self, node_id: str) -> None:
@@ -196,6 +246,8 @@ class NetFabric:
         if factor <= 0:
             raise ValueError("degrade factor must be > 0")
         self._degraded[_link_key(a, b)] = float(factor)
+        if self._flows is not None:
+            self._flows.mark_dirty()    # reprice active flows on the link
         self.env.emit(obsev.net_slow_link(a, b, factor))
 
     # -- transfer scheduling ------------------------------------------------ #
@@ -209,6 +261,28 @@ class NetFabric:
         return (n_blocks * prof.block_s(self.chunk_bytes) * factor,
                 prof.latency_s + jitter)
 
+    def _wire_bytes(self, nbytes: int) -> float:
+        """Block-padded payload size: the fair-share flow moves whole
+        chunks, matching the lane model's per-block charging."""
+        return float(max(1, -(-int(nbytes) // self.chunk_bytes))
+                     * self.chunk_bytes)
+
+    def _pair_cap_bytes(self, a: str, b: str) -> float:
+        prof = self.topology.link(a, b)
+        factor = self._degraded.get(_link_key(a, b), 1.0)
+        return prof.bandwidth_mibps * MIB / factor
+
+    def _access_cap_bytes(self, node_id: str) -> float:
+        return self.topology.access_mibps(node_id) * MIB
+
+    def _observe_rate(self, f: fairshare.Flow) -> None:
+        tr = self.env.tracer
+        if tr.enabled:
+            lk = _link_key(f.src, f.dst)
+            tr.event("net.rate", f"link/{lk[0]}~{lk[1]}/flows", self.env.now,
+                     kind=f.kind, src=f.src, dst=f.dst, cid=f.cid[:_CID_W],
+                     mibps=round(f.rate / MIB, 3))
+
     def transfer(self, src: str, dst: str, cid: str, nbytes: int, *,
                  kind: str = "fetch") -> float:
         """Reserve the (src, dst) link for one chunked CID transfer starting
@@ -217,6 +291,8 @@ class NetFabric:
         if not self.reachable(src, dst):
             raise UnreachableError(f"{src}->{dst} unreachable "
                                    f"(partition or churn)")
+        if self._flows is not None:
+            return self._transfer_fair(src, dst, cid, nbytes, kind=kind)
         ser, lat = self._cost_parts(src, dst, nbytes)
         duration = ser + lat
         lk = _link_key(src, dst)
@@ -268,13 +344,111 @@ class NetFabric:
             self.stats["chain_bytes"] += int(nbytes)
         return end - self.env.now
 
+    # -- fair-share flow path ----------------------------------------------- #
+    def _count_transfer(self, kind: str, src: str, dst: str, cid: str,
+                        nbytes: int, lane: str) -> None:
+        """Admission-time accounting shared with the lane model."""
+        self.env.emit(obsev.net_transfer(kind, src, dst, cid, lane=lane,
+                                         nbytes=int(nbytes)))
+        self.stats["transfers"] += 1
+        self.stats["bytes"] += int(nbytes)
+        if kind == "reroute":
+            self.stats["reroutes"] += 1
+        if kind in ("replica", "reroute"):
+            self.stats["replica_serves"] += 1
+        if kind == "chain":
+            self.stats["chain_bytes"] += int(nbytes)
+
+    def _transfer_fair(self, src: str, dst: str, cid: str, nbytes: int, *,
+                       kind: str) -> float:
+        """Synchronous charge under fair sharing: admit the flow, settle
+        rates, and return the admission-time projection (current contention,
+        no future arrivals). The flow stays in the share table until its
+        projected completion — departures may retire it earlier; the charge
+        is the commitment, like the lane model's busy-until reservation."""
+        flows = self._flows
+        assert flows is not None
+        _, lat = self._cost_parts(src, dst, nbytes)  # same rng draw order
+        wire = self._wire_bytes(nbytes)
+        key = ("flow", next(self._flow_seq))
+        flows.settle()
+
+        def done():
+            flows.complete(key)
+
+        f = flows.add(key, src, dst, cid, kind, wire, lat, done,
+                      note=f"net:flowdone:{kind}:{dst}:{cid[:_CID_W]}")
+        flows.settle()      # reprice with the new flow admitted
+        start = self.env.now
+        end = f.scheduled_eta
+        if end is None:     # starved at admission (non-demand sync caller)
+            est = max(1.0, flows.rate_estimate(src, dst, kind))
+            end = start + lat + wire / est
+        lane = fairshare.qos_class(kind)
+        self.trace.append(TransferRecord(kind, src, dst, cid, int(nbytes),
+                                         start, end))
+        tr = self.env.tracer
+        if tr.enabled:
+            lk = _link_key(src, dst)
+            tr.span_at(f"net.{kind}", f"link/{lk[0]}~{lk[1]}/{lane}",
+                       start, end, src=src, dst=dst, cid=cid[:_CID_W],
+                       nbytes=int(nbytes),
+                       mibps=round(f.rate / MIB, 3))
+        self._count_transfer(kind, src, dst, cid, nbytes, lane)
+        self.stats["busy_s"] += end - start
+        return end - start
+
+    def _transfer_async_fair(self, src: str, dst: str, cid: str, nbytes: int,
+                             on_land: Callable[[], None], *, kind: str,
+                             key: Any) -> float:
+        flows = self._flows
+        assert flows is not None
+        _, lat = self._cost_parts(src, dst, nbytes)  # same rng draw order
+        wire = self._wire_bytes(nbytes)
+
+        def land():
+            f = flows.complete(key)
+            self._inflight.pop(key, None)
+            now = self.env.now
+            if f is not None:
+                lane = fairshare.qos_class(kind)
+                self.trace.append(TransferRecord(kind, src, dst, cid,
+                                                 int(nbytes), f.t_start, now))
+                self.stats["busy_s"] += now - f.t_start
+                tr = self.env.tracer
+                if tr.enabled:
+                    lk = _link_key(src, dst)
+                    tr.span_at(f"net.{kind}",
+                               f"link/{lk[0]}~{lk[1]}/{lane}",
+                               f.t_start, now, src=src, dst=dst,
+                               cid=cid[:_CID_W], nbytes=int(nbytes),
+                               rate_changes=f.rate_changes,
+                               mean_mibps=round(f.mean_mibps(now), 3))
+            on_land()
+
+        f = flows.add(key, src, dst, cid, kind, wire, lat, land,
+                      note=f"net:land:{kind}:{dst}:{cid[:_CID_W]}")
+        self._inflight[key] = (src, dst)
+        self._count_transfer(kind, src, dst, cid, nbytes,
+                             fairshare.qos_class(kind))
+        eta = f.scheduled_eta
+        return (eta - self.env.now) if eta is not None else 0.0
+
     def transfer_async(self, src: str, dst: str, cid: str, nbytes: int,
                        on_land: Callable[[], None], *, kind: str,
                        key: Any = None) -> float:
         """Like ``transfer`` but the payload only *lands* (``on_land``) after
-        the charged time elapses — an in-flight, cancellable transfer."""
-        charged = self.transfer(src, dst, cid, nbytes, kind=kind)
+        the charged time elapses — an in-flight, cancellable transfer.
+        Under fair sharing the land event is rescheduled live as contention
+        changes; the return value is the admission-time projection."""
         key = key if key is not None else (kind, dst, cid)
+        if self._flows is not None:
+            if not self.reachable(src, dst):
+                raise UnreachableError(f"{src}->{dst} unreachable "
+                                       f"(partition or churn)")
+            return self._transfer_async_fair(src, dst, cid, nbytes, on_land,
+                                             kind=kind, key=key)
+        charged = self.transfer(src, dst, cid, nbytes, kind=kind)
         self._inflight[key] = (src, dst)
 
         def land():
@@ -292,10 +466,33 @@ class NetFabric:
     # -- replica selection -------------------------------------------------- #
     def best_provider(self, dst: str, cid: str,
                       exclude: Tuple[str, ...] = ()) -> Optional[str]:
-        """Cheapest reachable provider: queue wait + latency + payload time,
-        node id as the deterministic tiebreak."""
+        """Cheapest reachable provider, node id as the deterministic
+        tiebreak. Lane model: queue wait + latency + payload time off the
+        static profile. Fair-share: congestion-aware — latency + payload
+        over the provider's *current residual* demand-class bandwidth, so
+        fan-in on a hot origin steers fetches to idle replicas."""
         nbytes = self.size_of(cid)
         best, best_cost = None, None
+        if self._flows is not None:
+            # no settle here: estimates tolerate intra-batch staleness.
+            # Flow *membership* (the competing-weight term) is indexed at
+            # admission, so it is always current; only higher-tier consumed
+            # rates can lag a batch, and for demand-class ranking (the one
+            # callers use) there is no higher tier — the estimate is exact
+            # w.r.t. membership either way, and ranking stays O(providers)
+            # instead of forcing a full reprice per query.
+            wire = self._wire_bytes(nbytes)
+            for p in self._providers.get(cid, ()):
+                if p == dst or p in exclude or not self.reachable(p, dst):
+                    continue
+                est = self._flows.rate_estimate(p, dst, "fetch")
+                prof = self.topology.link(p, dst)
+                t = prof.latency_s + (wire / est if est > 0.0
+                                      else float("inf"))
+                cost = (t, p)
+                if best_cost is None or cost < best_cost:
+                    best, best_cost = p, cost
+            return best
         for p in self._providers.get(cid, ()):
             if p == dst or p in exclude or not self.reachable(p, dst):
                 continue

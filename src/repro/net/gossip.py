@@ -41,6 +41,19 @@ class GossipReplicator:
         # so each link's base is parsed from its (model-sized) payload at
         # most once per replicator, not on every announce of the chain
         self._base_of: dict = {}
+        # store-less exclusion memo, invalidated by membership growth: at
+        # thousand-silo scale rebuilding the tuple per announce is O(n^2)
+        # across a round of announces
+        self._storeless: tuple = ()
+        self._storeless_seen: int = -1
+
+    def _storeless_nodes(self) -> tuple:
+        count = self.fabric.node_count
+        if count != self._storeless_seen:
+            self._storeless = tuple(n for n in self.fabric.nodes
+                                    if n not in self.network.nodes)
+            self._storeless_seen = count
+        return self._storeless
 
     def _base_cid(self, src_node, cid: str) -> Optional[str]:
         """``base_cid`` of a locally-held payload ('' = chain root); None
@@ -82,10 +95,8 @@ class GossipReplicator:
         chain = self._base_chain(src_node, base_cid) if base_cid else []
         # replicate only onto store nodes: the fabric also carries store-less
         # chain participants (the engine's 'orchestrator' replica)
-        storeless = tuple(n for n in self.fabric.nodes
-                          if n not in self.network.nodes)
         for peer_id in self.fabric.nearest(owner, self.factor,
-                                           exclude=storeless):
+                                           exclude=self._storeless_nodes()):
             peer = self.network.nodes.get(peer_id)
             if peer is None:
                 self.stats["skipped"] += 1

@@ -27,19 +27,30 @@ from repro.obs.metrics import StatsView
 class Prefetcher:
     def __init__(self, fabric: NetFabric, network,
                  decoder: Optional[Callable] = None, *,
-                 delay_s: float = 0.0):
+                 delay_s: float = 0.0, fanout: int = 0):
         self.fabric = fabric
         self.network = network          # StoreNetwork (duck-typed: .nodes)
         # None -> each node's own wire decoder (delta base chains resolve
         # through that node's decoded cache)
         self.decoder = decoder
         self.delay_s = float(delay_s)
+        # > 0: only the fanout cheapest peers of the announcer prefetch a
+        # fresh CID — at thousand-silo scale all-to-all prefetch floods the
+        # fabric with scavenger flows nobody will score against
+        self.fanout = int(fanout)
         self.stats = StatsView("prefetch")
+
+    def _targets(self, owner: str):
+        if self.fanout <= 0 or len(self.network.nodes) <= self.fanout:
+            return list(self.network.nodes)
+        storeless = tuple(n for n in self.fabric.nodes
+                          if n not in self.network.nodes)
+        return self.fabric.nearest(owner, self.fanout, exclude=storeless)
 
     # fabric announce subscriber ------------------------------------------- #
     def on_announce(self, cid: str, owner: str, nbytes: int,
                     base_cid: str = "") -> None:
-        for nid in list(self.network.nodes):
+        for nid in self._targets(owner):
             if nid == owner:
                 continue
             self.stats["issued"] += 1

@@ -40,6 +40,19 @@ class LinkProfile:
         return (chunk_bytes / MIB) / self.bandwidth_mibps
 
 
+# preset -> (access tiers MiB/s, cumulative weights); a node hashes into the
+# table. The access port caps the node's *aggregate* up/down rate under the
+# fair-share bandwidth model (hot-provider fan-in is what actually contends
+# at thousand-silo scale — distinct pair links rarely carry two flows at
+# once). Every tier is >= the preset's fastest pair link, so a *solo*
+# transfer is never access-limited and matches the lane model exactly.
+_ACCESS: Dict[str, Tuple[Tuple[float, ...], Tuple[int, ...]]] = {
+    "lan": ((2500.0,), (1,)),
+    "wan-uniform": ((50.0,), (1,)),
+    "wan-heterogeneous": ((500.0, 250.0, 125.0), (1, 3, 5)),
+    "paper-testbed": ((250.0,), (1,)),
+}
+
 # preset -> (tiers, cumulative weights); a pair hashes into the weight table
 _TIERS: Dict[str, Tuple[Tuple[LinkProfile, ...], Tuple[int, ...]]] = {
     "lan": ((LinkProfile(1250.0, 0.0002, 0.0),), (1,)),
@@ -68,6 +81,7 @@ class Topology:
         self.preset = preset
         self.seed = seed
         self._cache: Dict[Tuple[str, str], LinkProfile] = {}
+        self._access_cache: Dict[str, float] = {}
 
     def link(self, a: str, b: str) -> LinkProfile:
         if a == b:
@@ -88,6 +102,25 @@ class Topology:
                 prof = tiers[idx]
             self._cache[pair] = prof
         return prof
+
+    def access_mibps(self, node_id: str) -> float:
+        """The node's symmetric access-port capacity (MiB/s): the aggregate
+        rate cap across all its concurrent transfers under the fair-share
+        model. Deterministic in (preset, seed, node)."""
+        cap = self._access_cache.get(node_id)
+        if cap is None:
+            tiers, weights = _ACCESS[self.preset]
+            if len(tiers) == 1:
+                cap = tiers[0]
+            else:
+                h = hashlib.sha256(
+                    f"{self.preset}:{self.seed}:access:{node_id}"
+                    .encode()).digest()
+                draw = int.from_bytes(h[:8], "big") % weights[-1]
+                idx = next(i for i, w in enumerate(weights) if draw < w)
+                cap = tiers[idx]
+            self._access_cache[node_id] = cap
+        return cap
 
     def base_cost_s(self, a: str, b: str, nbytes: int,
                     chunk_bytes: int) -> float:

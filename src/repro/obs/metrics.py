@@ -51,6 +51,9 @@ SCHEMAS: Dict[str, Dict[str, str]] = {
         "queue_wait_s": "seconds", "busy_s": "seconds",
         "reroutes": "counter", "replica_serves": "counter",
         "cancelled": "counter", "chain_bytes": "counter",
+        # fair-share bandwidth model (bandwidth_model='fair-share')
+        "settles": "counter",       # vectorized rate recomputes
+        "reschedules": "counter",   # land events moved by repricing
     },
     # net.gossip.GossipReplicator
     "gossip": {

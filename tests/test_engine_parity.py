@@ -1,0 +1,120 @@
+"""Timeline parity: the batched SimEnv engine must reproduce the reference
+(pre-batching) engine bit-for-bit — same execution order, same clock, same
+Perfetto spans — on both random event soups and full federation runs.
+
+The PR 7 trace exporter is the parity oracle for the e2e runs: every
+round-phase, transfer, and chain span must match span-for-span."""
+import itertools
+import random
+
+import pytest
+
+from repro.config import FedConfig, NetConfig, ObsConfig, SimConfig
+from repro.core.simenv import SimEnv
+
+# --------------------------------------------------------------------------- #
+# Random event soups: schedule / cancel / keyed cancel-and-replace programs,
+# interpreted identically on each engine. Tags and rng draws happen in
+# execution order, so any divergence in ordering cascades into the log.
+# --------------------------------------------------------------------------- #
+
+_DELAYS = (0.0, 0.0125, 0.05, 0.3, 1.0)
+
+
+def _soup_log(seed: int, **env_kwargs):
+    env = SimEnv(**env_kwargs)
+    rng = random.Random(seed)
+    tags = itertools.count()
+    log = []
+
+    def make_cb(depth: int):
+        tag = next(tags)
+
+        def cb():
+            log.append((round(env.now, 9), tag))
+            if depth < 3:
+                for _ in range(rng.randrange(3)):
+                    key = None
+                    if rng.random() < 0.4:
+                        key = ("k", rng.randrange(6))
+                    env.schedule(rng.choice(_DELAYS), make_cb(depth + 1),
+                                 key=key)
+            if rng.random() < 0.25:
+                env.cancel(("k", rng.randrange(6)))
+        return cb
+
+    for _ in range(20):
+        key = ("k", rng.randrange(6)) if rng.random() < 0.3 else None
+        env.schedule(rng.choice(_DELAYS) * rng.randrange(1, 4),
+                     make_cb(0), key=key)
+    # segmented runs: deadline semantics and cross-run tie order must match
+    env.run(until=0.8)
+    log.append(("mark", round(env.now, 9)))
+    env.run(until=1.7)
+    log.append(("mark", round(env.now, 9)))
+    env.run()
+    return log, round(env.now, 9), env.events_run
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_event_soup_parity_across_engines(seed):
+    ref = _soup_log(seed, reference=True)
+    assert _soup_log(seed) == ref                           # epsilon 0
+    assert _soup_log(seed, batch_epsilon_s=0.05) == ref     # windowed
+    assert _soup_log(seed, batch_epsilon_s=0.05,
+                     compact_frac=0.05, compact_min=4) == ref
+
+
+def test_peek_and_deadline_advance_parity():
+    for kwargs in ({"reference": True}, {}, {"batch_epsilon_s": 0.1}):
+        env = SimEnv(**kwargs)
+        env.schedule(2.0, lambda: None)
+        env.run(until=1.0)
+        assert env.now == 1.0 and env.peek() == 2.0
+        env.run()
+        assert env.now == 2.0 and env.idle()
+
+
+# --------------------------------------------------------------------------- #
+# End-to-end: a small traced federation (lanes fabric, obs on) produces the
+# identical span timeline under both engines, and under a positive epsilon
+# (the lane fabric registers no batch hooks, so only hook *frequency* could
+# differ — and there are none).
+# --------------------------------------------------------------------------- #
+
+def _span_key(s):
+    return (s.kind, s.track, round(s.t0, 9), round(s.t1, 9))
+
+
+def _run_traced(sim):
+    from repro.configs import get_config
+    from repro.core.builder import build_image_experiment
+    fed = FedConfig(n_silos=3, clients_per_silo=1, rounds=2, local_epochs=1,
+                    mode="sync", scorer="accuracy", agg_policy="all",
+                    score_policy="median",
+                    net=NetConfig(preset="wan-heterogeneous",
+                                  replication_factor=1, prefetch=True),
+                    obs=ObsConfig(enabled=True), sim=sim)
+    orch = build_image_experiment(get_config("paper-cnn"), fed, n_train=150,
+                                  n_test=60, seed=0)
+    for s in orch.silos:
+        s.time_scale = 0.0      # sim clock = pure function of the model
+    orch.run(fed.rounds)
+    orch.env.run()              # drain in-flight transfers
+    return orch
+
+
+@pytest.mark.slow
+def test_e2e_timeline_parity_batched_vs_reference():
+    ref = _run_traced(SimConfig(reference=True))
+    assert ref.env.reference is True
+    ref_spans = sorted(_span_key(s) for s in ref.obs.tracer.spans)
+    assert ref_spans, "oracle run produced no spans"
+    for sim in (None, SimConfig(batch_epsilon_s=0.005)):
+        got = _run_traced(sim)
+        assert got.env.reference is False
+        assert sorted(_span_key(s) for s in got.obs.tracer.spans) == ref_spans
+        assert round(got.env.now, 9) == round(ref.env.now, 9)
+        assert dict(got.fabric.stats) == dict(ref.fabric.stats)
+        assert list(got.env.trace) == list(ref.env.trace)
+        assert [r for r in got.fabric.trace] == [r for r in ref.fabric.trace]

@@ -1,7 +1,9 @@
 """benchmarks/netbench.py --quick inside the tier-1 budget: the BENCH_net
 artifact keeps its schema and the acceptance invariants stay machine-checked
 (prefetch halves async WAN fetch stall without slowing the round, hit rate
-> 0, partition failover reroutes)."""
+> 0, partition failover reroutes, and the thousand-silo scale sweep lands
+10/100/1000 rows with the batched engine >= 5x the reference engine's
+events/sec at 100 silos)."""
 import json
 
 import pytest
@@ -24,7 +26,7 @@ def test_bench_net_schema(bench):
     assert set(written) == {"quick", "config", "scenarios",
                             "async_prefetch_speedup", "prefetch_stall_ratio",
                             "prefetch_hit_rate", "delta", "delta_bytes_ratio",
-                            "failover"}
+                            "failover", "scale"}
     expected_scenarios = {"sync_lan", "sync_wan-heterogeneous", "async_lan",
                           "async_wan-heterogeneous",
                           "async_wan-heterogeneous_noprefetch"}
@@ -49,6 +51,43 @@ def test_bench_net_schema(bench):
         assert len(rows) >= 2 and all(b > 0 for b in rows)
     assert len(delta["per_round_ratios"]) == \
         len(delta["per_round_wan_bytes"]["int8"]) - 1
+
+
+def test_bench_net_scale_schema(bench):
+    """Thousand-silo sweep rows: 10 / 100 / 1000 silos on the batched
+    engine plus a 100-silo reference baseline, each with events/sec."""
+    _, written = bench
+    sweep = written["scale"]
+    assert set(sweep) == {"rows", "baseline_100_reference", "epsilon_s",
+                          "speedup_100"}
+    assert [r["silos"] for r in sweep["rows"]] == [10, 100, 1000]
+    for row in sweep["rows"] + [sweep["baseline_100_reference"]]:
+        assert row["events"] > 0
+        assert row["events_per_s"] > 0
+        assert row["wall_s"] >= 0
+        assert row["transfers"] > 0
+        assert 0.0 < row["fairness_jain_fetch"] <= 1.0
+        assert row["settles"] > 0
+    assert all(r["engine"] == "batched" for r in sweep["rows"])
+    assert sweep["baseline_100_reference"]["engine"] == "reference"
+    # identical workload on both engines at 100 silos
+    b100 = sweep["rows"][1]
+    ref = sweep["baseline_100_reference"]
+    assert b100["events"] == ref["events"]
+    assert b100["transfers"] == ref["transfers"]
+    # the batched engine settles per window, the reference per event
+    assert b100["settles"] < ref["settles"]
+    assert b100["compactions"] >= 1 and ref["compactions"] == 0
+    # the 1000-silo row completes (this is the scale tentpole: the row
+    # existing with nonzero throughput IS the acceptance)
+    assert sweep["rows"][2]["events"] >= 10 * b100["events"] * 0.9
+
+
+def test_bench_net_scale_acceptance(bench):
+    """Tentpole gate: >= 5x scheduler events/sec over the pre-PR engine at
+    100 silos, recorded in the artifact."""
+    _, written = bench
+    assert written["scale"]["speedup_100"] >= 5.0
 
 
 def test_bench_net_acceptance(bench):

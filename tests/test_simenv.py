@@ -115,3 +115,84 @@ def test_keyed_reregistration_after_fire_is_independent():
     env.schedule(1.0, lambda: seen.append(2), key="tick")
     env.run()
     assert seen == [1, 2]
+
+
+# --------------------------------------------------------------------------- #
+# Batched engine: heap compaction, batching counters, batch hooks.
+# --------------------------------------------------------------------------- #
+
+def test_compaction_removes_cancelled_and_peek_reports_next_live():
+    """Regression pin: after a bulk cancellation triggers heap compaction,
+    ``peek()`` reports the next *live* event's time and the survivors still
+    run in order."""
+    env = SimEnv(compact_frac=0.1, compact_min=8)
+    seen = []
+    events = [env.schedule(1.0 + i, lambda i=i: seen.append(i), key=("e", i))
+              for i in range(40)]
+    for i in range(40):
+        if i % 4:                   # cancel 30 of 40 -> well past the
+            events[i].cancel()      # compact_min=8 / frac=0.1 thresholds
+    assert env.compactions >= 1
+    # compacted entries are physically gone (only post-compaction cancels
+    # that haven't re-crossed the threshold may remain as tombstones)
+    assert 10 <= len(env._q) < 40
+    assert env.peek() == 1.0        # next live event (e0), not a tombstone
+    env.run()
+    assert seen == [0, 4, 8, 12, 16, 20, 24, 28, 32, 36]
+    assert env.events_run == 10
+
+
+def test_reference_engine_never_compacts():
+    env = SimEnv(reference=True, compact_frac=0.01, compact_min=1)
+    events = [env.schedule(1.0 + i, lambda: None) for i in range(20)]
+    for ev in events[:-1]:
+        ev.cancel()
+    assert env.compactions == 0
+    assert len(env._q) == 20        # lazy deletion only
+    assert env.peek() == 20.0       # peek still prunes to the live head
+    env.run()
+    assert env.events_run == 1
+
+
+def test_epsilon_window_coalesces_hook_flushes_not_order():
+    """A positive epsilon coarsens *hook frequency* only: events in one
+    window flush the batch hook once, but still execute in exact time
+    order."""
+    order = []
+    flushes = []
+
+    def make(env):
+        for i, t in enumerate((0.0, 0.004, 0.009, 0.5, 0.504, 2.0)):
+            env.schedule(t, lambda i=i: order.append(i))
+        env.add_batch_hook(lambda: flushes.append(env.now))
+        env.run()
+
+    make(SimEnv(batch_epsilon_s=0.01))
+    batched_order, batched_flushes = order[:], flushes[:]
+    order.clear(), flushes.clear()
+    make(SimEnv(reference=True))
+    assert batched_order == order == [0, 1, 2, 3, 4, 5]
+    # batched: entry flush + one per window; reference: entry + one per event
+    assert len(batched_flushes) == 1 + 3
+    assert len(flushes) == 1 + 6
+
+
+def test_batch_counters_and_same_timestamp_batching():
+    env = SimEnv()                  # epsilon 0: same-timestamp batches only
+    for t in (1.0, 1.0, 1.0, 2.0):
+        env.schedule(t, lambda: None)
+    env.run()
+    assert env.events_run == 4
+    assert env.batches == 2
+
+
+def test_merge_guard_runs_newly_scheduled_event_in_order():
+    """A callback scheduling *into* the current epsilon window must not be
+    overtaken by later batch members."""
+    env = SimEnv(batch_epsilon_s=1.0)
+    seen = []
+    env.schedule(0.0, lambda: (seen.append("a"),
+                               env.schedule(0.1, lambda: seen.append("mid"))))
+    env.schedule(0.5, lambda: seen.append("b"))
+    env.run()
+    assert seen == ["a", "mid", "b"]
