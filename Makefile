@@ -4,7 +4,7 @@ PYTHON ?= python
 PYTEST_ARGS ?=
 
 .PHONY: verify netbench scalebench kernelbench scorebench chainbench \
-	recoverybench trace
+	trustbench recoverybench trace
 
 verify:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q $(PYTEST_ARGS)
@@ -25,6 +25,12 @@ scorebench:
 
 chainbench:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.chainbench --quick
+
+# Adversarial trust scenarios only (colluding scorers, sealer slashing +
+# governance eviction, reputation recovery): merges the "trust" section
+# into BENCH_chain.json
+trustbench:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.chainbench --quick --trust-only
 
 recoverybench:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.recoverybench --quick

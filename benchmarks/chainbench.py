@@ -13,7 +13,15 @@ blocks gossiped as charged WAN transfers) and reports, per scenario:
     replica converges to one head with byte-identical contract state;
   * an **equivocating byzantine sealer**: two blocks per height to different
     halves of the swarm; honest replicas detect the equivocation and fork
-    choice still converges.
+    choice still converges;
+  * the **adversarial trust scenarios** (the ``trust`` section): a
+    colluding scorer clique (bad models + mutually inflated scores) that
+    must not change the honest silos' aggregation picks vs an attack-free
+    control run; an equivocating sealer auto-reported on-chain, slashed
+    below the governance threshold and evicted from the sealer set by
+    reputation-weighted votes; and a byzantine scorer whose reputation dips
+    under outlier penalties and recovers through agreement rewards after
+    the fault heals.
 
 Silos get fixed simulated train windows and ``time_scale=0``, so every
 number is a pure function of the modeled windows + link profiles —
@@ -164,12 +172,222 @@ def run_byzantine(quick: bool) -> Dict:
     return row
 
 
+def run_colluding(quick: bool) -> Dict:
+    """A colluding clique (2 of 6 silos, <= floor(n/3)): its members submit
+    sign-flipped (wrecked) models AND inflate each other's scores to 0.99.
+    With the robust-median collapse the honest silos' aggregation picks
+    must be identical to an attack-free control run (same seed, same bad
+    models, honest scoring), and settlement flags every colluder's
+    inflated score as a robust-z outlier (on-chain reputation penalty).
+    The pick comparison runs with the *unweighted* robust median —
+    reputation-weighted collapse changes honest models' collapsed values
+    between the two runs (different weights select different order
+    statistics), which would compare defense strength against comparison
+    noise instead of the attack."""
+    silos = 6
+    rounds = 2 if quick else 3
+    clique = ("silo4", "silo5")
+
+    def _one(attack: bool):
+        scenarios = (FaultScenario(action="colluding_scorers",
+                                   node=",".join(clique), round=1,
+                                   when="train"),) if attack else ()
+        fed = FedConfig(n_silos=silos, clients_per_silo=1, rounds=rounds,
+                        local_epochs=1, mode="sync", scorer="accuracy",
+                        agg_policy="top_k", score_policy="median",
+                        policy_k=2, commit_reveal=True,
+                        net=NetConfig(preset="lan", replication_factor=1,
+                                      prefetch=True, scenarios=scenarios))
+        # sign-flipped clique models score ~0 on every honest test set —
+        # clear separation from honest models, so the only thing the attack
+        # can change is the clique models' (robustly collapsed) scores
+        specs = [SiloSpec(byzantine="signflip" if f"silo{i}" in clique
+                          else None,
+                          extra_train_delay=TRAIN_WINDOW_S + STAGGER_S * i)
+                 for i in range(silos)]
+        orch = build_image_experiment(CNN, fed,
+                                      n_train=1200 if quick else 2400,
+                                      n_test=240 if quick else 400,
+                                      silo_specs=specs, seed=5)
+        for s in orch.silos:
+            s.time_scale = TIME_SCALE
+        orch.run(fed.rounds)
+        orch.env.run()
+        return orch
+
+    control = _one(attack=False)
+    attacked = _one(attack=True)
+    honest = [s.silo_id for s in control.silos if s.silo_id not in clique]
+    picks = {
+        run_name: {s.silo_id: [p["owners"] for p in s.pick_log]
+                   for s in orch.silos if s.silo_id in honest}
+        for run_name, orch in (("control", control), ("attack", attacked))}
+    rep = attacked.contract.reputation
+    outlier_flags = [p["node"] for e, p in
+                     _replay_events(attacked, ("ReputationUpdated",))
+                     if p["reason"] == "outlier"]
+    row = {
+        "clique": list(clique),
+        "honest_picks_equal": picks["control"] == picks["attack"],
+        "honest_picks": picks["attack"],
+        "clique_rep": {n: rep.get(n, 0.0) for n in clique},
+        "honest_rep_min": min(rep.get(n, 0.0) for n in honest),
+        "outlier_flags": outlier_flags,
+        "colluders_flagged_outlier":
+            all(n in outlier_flags for n in clique),
+        "heads_converged": attacked.chain.converged(),
+        "state_digests_equal":
+            len(set(attacked.chain.state_digests().values())) == 1,
+    }
+    emit("trust_colluding_picks_equal", row["honest_picks_equal"],
+         f"clique_rep={row['clique_rep']} "
+         f"flagged={row['colluders_flagged_outlier']}")
+    return row
+
+
+def _replay_events(orch, names) -> list:
+    """Re-execute the engine replica's canonical chain into a shadow
+    contract with a subscriber attached: deterministic replay reproduces
+    the full consensus event stream — the post-hoc way to observe
+    trajectories (reputation over time, slash rounds) without hooking the
+    live run."""
+    from repro.chain.adapter import ContractExecutor
+    from repro.core.contract import UnifyFLContract
+    events: list = []
+    shadow = ContractExecutor(UnifyFLContract(orch.fed.mode), subscribers=[
+        lambda e, p: events.append((e, p)) if e in names else None])
+    for blk in orch.ledger.blocks:
+        shadow.execute_block(blk)
+    return events
+
+
+def run_slashing(quick: bool) -> Dict:
+    """An equivocating sealer is auto-reported on-chain by honest replicas,
+    slashed below the governance threshold, then evicted from the sealer
+    set by reputation-weighted remove_sealer votes — all consensus state,
+    byte-identical across replicas."""
+    from repro.core.contract import GOV_EVICT_REP
+    silos, rounds = 4, 3
+    scenarios = (FaultScenario(action="byzantine_sealer", node="silo1",
+                               round=1, when="train"),)
+    net = NetConfig(preset="wan-heterogeneous", replication_factor=1,
+                    prefetch=True, scenarios=scenarios)
+    fed = _fed("sync", net, silos=silos, rounds=rounds,
+               scorer_deadline_s=2.0)
+    orch = build_image_experiment(CNN, fed, n_train=300 if quick else 900,
+                                  n_test=120 if quick else 300,
+                                  silo_specs=[
+                                      SiloSpec(extra_train_delay=TRAIN_WINDOW_S
+                                               + STAGGER_S * i)
+                                      for i in range(silos)], seed=2)
+    for s in orch.silos:
+        s.time_scale = TIME_SCALE
+    orch.run(rounds)
+    orch.env.run()
+    contracts = [v.contract for v in orch.chain.views.values()]
+    slashed = all(c.reputation.get("silo1", 1.0) < GOV_EVICT_REP
+                  for c in contracts)
+    # chain-order replay: in which FL round did the first slash land?
+    rnd, slash_rounds = 0, []
+    for e, p in _replay_events(orch, ("StartTraining", "SealerSlashed")):
+        if e == "StartTraining":
+            rnd = p["round"]
+        elif p["sealer"] == "silo1":
+            slash_rounds.append(max(rnd, 1))
+    # governance: two healthy silos vote the slashed sealer out
+    for voter in ("silo0", "silo2"):
+        orch.ledger.submit(voter, "remove_sealer", sealer="silo1",
+                           logical_time=orch.env.now)
+    orch.env.run()
+    row = {
+        "equivocations_sent": orch.chain.stats["equivocations_sent"],
+        "equivocation_reports": orch.chain.stats["equivocation_reports"],
+        "sealer_rep": orch.contract.reputation.get("silo1", 1.0),
+        "slashed_below_threshold": slashed,
+        "first_slash_round": min(slash_rounds) if slash_rounds else -1,
+        "slashed_within_rounds": bool(slash_rounds)
+            and min(slash_rounds) <= rounds,
+        "governance_evicted":
+            all("silo1" not in c.sealer_set for c in contracts),
+        "heads_converged": orch.chain.converged(),
+        "state_digests_equal":
+            len(set(orch.chain.state_digests().values())) == 1,
+    }
+    emit("trust_slashing_sealer_rep", f"{row['sealer_rep']:.2f}",
+         f"reports={row['equivocation_reports']} "
+         f"evicted={row['governance_evicted']}")
+    return row
+
+
+def run_recovery(quick: bool) -> Dict:
+    """A byzantine scorer (inverts every score) is flagged as a robust-z
+    outlier and loses reputation; after the fault heals, agreement rewards
+    recover it — the dip-and-recover trajectory, read off consensus
+    events."""
+    silos, rounds = 4, 3 if quick else 5
+    scenarios = (
+        FaultScenario(action="byzantine_scorer", node="silo2",
+                      round=1, when="train"),
+        FaultScenario(action="heal_scorer", node="silo2",
+                      round=2, when="train"),
+    )
+    net = NetConfig(preset="lan", replication_factor=1, prefetch=True,
+                    scenarios=scenarios)
+    fed = _fed("sync", net, silos=silos, rounds=rounds)
+    orch = build_image_experiment(CNN, fed, n_train=300 if quick else 900,
+                                  n_test=120 if quick else 300,
+                                  silo_specs=[
+                                      SiloSpec(extra_train_delay=TRAIN_WINDOW_S
+                                               + STAGGER_S * i)
+                                      for i in range(silos)], seed=7)
+    for s in orch.silos:
+        s.time_scale = TIME_SCALE
+    orch.run(rounds)
+    orch.env.run()
+    trajectory = [p["rep"] for e, p in
+                  _replay_events(orch, ("ReputationUpdated",))
+                  if p["node"] == "silo2"]
+    final = orch.contract.reputation.get("silo2", 1.0)
+    min_rep = min(trajectory) if trajectory else 1.0
+    row = {
+        "rep_trajectory": trajectory,
+        "rep_min": min_rep,
+        "rep_final": final,
+        "dipped": min_rep < 1.0,
+        "recovered": final > min_rep,
+        "heads_converged": orch.chain.converged(),
+        "state_digests_equal":
+            len(set(orch.chain.state_digests().values())) == 1,
+    }
+    emit("trust_recovery_rep", f"{final:.2f}",
+         f"min={min_rep:.2f} dipped={row['dipped']} "
+         f"recovered={row['recovered']}")
+    return row
+
+
+def _trust_ok(trust: Dict) -> bool:
+    return (trust["colluding"]["honest_picks_equal"]
+            and trust["colluding"]["colluders_flagged_outlier"]
+            and trust["slashing"]["slashed_below_threshold"]
+            and trust["slashing"]["slashed_within_rounds"]
+            and trust["slashing"]["governance_evicted"]
+            and trust["recovery"]["dipped"]
+            and trust["recovery"]["recovered"]
+            and all(t["heads_converged"] and t["state_digests_equal"]
+                    for t in trust.values()))
+
+
 def main(quick: bool = True, out_path: str = "BENCH_chain.json",
-         trace_path: str = "") -> Dict:
+         trace_path: str = "", trust_only: bool = False) -> Dict:
+    if trust_only:
+        return _main_trust_only(quick, out_path)
     with timed("chainbench"):
         grid = run_grid(quick)
         partition = run_partition(quick, trace_path)
         byzantine = run_byzantine(quick)
+        trust = {"colluding": run_colluding(quick),
+                 "slashing": run_slashing(quick),
+                 "recovery": run_recovery(quick)}
     out = {
         "quick": quick,
         "config": {"train_window_s": TRAIN_WINDOW_S,
@@ -177,6 +395,7 @@ def main(quick: bool = True, out_path: str = "BENCH_chain.json",
         "scenarios": grid,
         "partition": partition,
         "byzantine": byzantine,
+        "trust": trust,
     }
     write_artifact(out, out_path)
     ok = (all(r["heads_converged"] and r["state_digests_equal"]
@@ -191,13 +410,49 @@ def main(quick: bool = True, out_path: str = "BENCH_chain.json",
           and partition["rounds_completed"]
           and byzantine["equivocations_sent"] >= 1
           and byzantine["equivocations_seen"] >= 1
-          and byzantine["heads_converged"])
+          and byzantine["heads_converged"]
+          and _trust_ok(trust))
     emit_acceptance(
         "chain", ok,
         "replicas converge with identical state in every scenario; WAN "
-        "finality > LAN; partition forks + heals; equivocation detected")
+        "finality > LAN; partition forks + heals; equivocation detected; "
+        "colluding clique neutralized; slashed sealer evicted; byzantine "
+        "scorer reputation dips and recovers")
     return out
 
 
+def _main_trust_only(quick: bool, out_path: str) -> Dict:
+    """``--trust-only``: run just the adversarial trust scenarios and merge
+    the ``trust`` section into an existing artifact (or a fresh skeleton) —
+    the ``make trustbench`` entrypoint."""
+    import json
+    import os
+    with timed("trustbench"):
+        trust = {"colluding": run_colluding(quick),
+                 "slashing": run_slashing(quick),
+                 "recovery": run_recovery(quick)}
+    out = {"quick": quick,
+           "config": {"train_window_s": TRAIN_WINDOW_S,
+                      "time_scale": TIME_SCALE, "model": CNN.arch_id}}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            out = json.load(f)
+    out["trust"] = trust
+    write_artifact(out, out_path)
+    emit_acceptance(
+        "trust", _trust_ok(trust),
+        "colluding clique flagged without moving honest picks; "
+        "equivocating sealer slashed + governance-evicted; healed "
+        "byzantine scorer's reputation dips then recovers")
+    return out
+
+
+def _extra(ap) -> None:
+    ap.add_argument("--trust-only", dest="trust_only", action="store_true",
+                    help="run only the adversarial trust scenarios and "
+                         "merge the 'trust' section into the artifact")
+
+
 if __name__ == "__main__":
-    bench_cli(main, doc=__doc__, default_out="BENCH_chain.json")
+    bench_cli(main, doc=__doc__, default_out="BENCH_chain.json",
+              extra=_extra)

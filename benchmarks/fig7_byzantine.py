@@ -3,40 +3,71 @@
 One of three silos is malicious (sign-flipped submissions). The naive policy
 (top-k without score filtering = pick_all here) ingests the poison; the smart
 policy (above_average on accuracy scores) filters it. Claim: smart >> naive.
+
+Results land in ``BENCH_fig7.json``; ``--trace`` exports the smart run's
+simulated timeline as a Chrome-trace JSON.
 """
 from __future__ import annotations
 
+from typing import Dict
+
 import numpy as np
 
-from benchmarks.common import CNN, N_TEST, N_TRAIN, ROUNDS, emit, fed, timed
+from benchmarks.common import (CNN, N_TEST, N_TRAIN, ROUNDS, bench_cli, emit,
+                               emit_acceptance, fed, timed, write_artifact)
 from repro.core.builder import SiloSpec, build_image_experiment, global_eval
 from repro.core.orchestrator import SiloPolicy
 
 
-def _run(policy_name: str, policy: SiloPolicy, seed=3):
+def _run(policy_name: str, policy: SiloPolicy, quick: bool,
+         trace_path: str = "", seed=3) -> Dict:
     specs = [SiloSpec(policy=policy), SiloSpec(policy=policy),
              SiloSpec(byzantine="signflip")]
-    orch = build_image_experiment(CNN, fed(rounds=ROUNDS), n_train=N_TRAIN,
-                                  n_test=N_TEST, alpha=0.5,
-                                  silo_specs=specs, seed=seed)
+    cfg = fed(rounds=ROUNDS)
+    if trace_path:
+        from repro.config import ObsConfig, replace
+        cfg = replace(cfg, obs=ObsConfig(enabled=True))
+    orch = build_image_experiment(CNN, cfg,
+                                  n_train=N_TRAIN if quick else 4 * N_TRAIN,
+                                  n_test=N_TEST if quick else 2 * N_TEST,
+                                  alpha=0.5, silo_specs=specs, seed=seed)
     orch.run(ROUNDS)
+    if trace_path:
+        orch.export_trace(trace_path)
     honest = [s for s in orch.silos if s.cluster.byzantine is None]
     ge = global_eval(orch)
     accs = [ge[s.silo_id]["accuracy"] for s in honest]
-    curve = [[m["local"]["accuracy"] for m in s.metrics] for s in honest]
+    curve = np.round(np.mean(
+        [[m["local"]["accuracy"] for m in s.metrics] for s in honest],
+        axis=0), 4).tolist()
     emit(f"fig7_{policy_name}_honest_acc", f"{np.mean(accs):.4f}",
-         f"curve={np.round(np.mean(curve, axis=0), 3).tolist()}")
-    return float(np.mean(accs))
+         f"curve={curve}")
+    return {"honest_acc": float(np.mean(accs)), "curve": curve}
 
 
-def main(quick: bool = True) -> dict:
+def main(quick: bool = True, out_path: str = "BENCH_fig7.json",
+         trace_path: str = "") -> Dict:
     with timed("fig7"):
-        naive = _run("naive_all", SiloPolicy("all", "median"))
-        smart = _run("smart_above_avg", SiloPolicy("above_average", "median"))
-        emit("fig7_smart_minus_naive", f"{smart - naive:.4f}",
-             "paper: smart policy recovers, naive degrades")
-    return {"naive": naive, "smart": smart}
+        naive = _run("naive_all", SiloPolicy("all", "median"), quick)
+        smart = _run("smart_above_avg", SiloPolicy("above_average", "median"),
+                     quick, trace_path)
+    margin = smart["honest_acc"] - naive["honest_acc"]
+    emit("fig7_smart_minus_naive", f"{margin:.4f}",
+         "paper: smart policy recovers, naive degrades")
+    out = {
+        "quick": quick,
+        "config": {"silos": 3, "byzantine": "signflip", "rounds": ROUNDS},
+        "naive": naive,
+        "smart": smart,
+        "smart_minus_naive": margin,
+    }
+    write_artifact(out, out_path)
+    emit_acceptance(
+        "fig7", margin > 0,
+        "score-filtered aggregation beats naive ingest-everything under a "
+        "sign-flipping silo")
+    return out
 
 
 if __name__ == "__main__":
-    main()
+    bench_cli(main, doc=__doc__, default_out="BENCH_fig7.json")

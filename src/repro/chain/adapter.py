@@ -24,10 +24,21 @@ singleton: the same API (submit / subscribe / verify / blocks / ...) bound to
 *one silo's* replica — submit-via-local-replica, read-your-replica. During a
 partition a view serves stale reads and its submissions seal on the local
 fork; the heal reconciles via fork choice + re-execution.
+
+``finalized_contract(k)`` adds finality-depth-aware reads: the contract
+state of the canonical chain truncated ``k`` blocks below head, re-executed
+into a muted shadow contract. A partition-heal reorg can rewrite at most
+the last ``reorg-depth`` blocks — reads at ``k >= reorg-depth`` are
+reorg-proof: nothing a consumer saw can be un-published. The shadow
+executor is cached per depth and extended incrementally while the
+finalized prefix only grows (the common case); a reorg deeper than ``k``
+falls back to a genesis re-execution of the new prefix.
 """
 from __future__ import annotations
 
 from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+from repro.chain.forkchoice import GENESIS
 
 
 class ContractExecutor:
@@ -96,6 +107,9 @@ class LedgerView:
     def __init__(self, net, replica):
         self._net = net
         self.replica = replica
+        # finality-read shadow executors: depth k -> (prefix head hash,
+        # prefix length, executor). See finalized_contract.
+        self._fin: Dict[int, Tuple[str, int, ContractExecutor]] = {}
 
     @property
     def node_id(self) -> str:
@@ -135,6 +149,40 @@ class LedgerView:
     def subscribe(self, fn: Callable[[str, Dict], None]) -> None:
         """Events from *this replica's* contract execution."""
         self.replica.executor.subscribe(fn)
+
+    def finalized_contract(self, k: int):
+        """Contract state of the canonical chain truncated ``k`` blocks
+        below head — a read that no reorg shallower than ``k`` can rewrite.
+        ``k <= 0`` returns the live head contract. The shadow contract is
+        fully muted (no subscribers): finalized reads never re-trigger
+        scoring or any other event-driven behaviour."""
+        if k <= 0:
+            return self.contract
+        chain = self.replica.canonical()
+        cut = chain[:max(0, len(chain) - k)]
+        head = cut[-1].hash if cut else GENESIS
+        cached = self._fin.get(k)
+        if cached is not None and cached[0] == head:
+            return cached[2].contract
+        ex: Optional[ContractExecutor] = None
+        suffix = cut
+        if cached is not None:
+            old_head, old_len, old_ex = cached
+            # cached prefix still on the (longer) finalized prefix: execute
+            # only the new suffix — the normal, incremental path
+            if old_head == GENESIS:
+                ex = old_ex
+            elif old_len <= len(cut) and cut[old_len - 1].hash == old_head:
+                ex, suffix = old_ex, cut[old_len:]
+        if ex is None:
+            # first read at this depth, or a reorg rewrote the finalized
+            # prefix itself (deeper than k): rebuild from genesis
+            ex = ContractExecutor(type(self.contract)(self.contract.mode),
+                                  subscribers=[])
+        for blk in suffix:
+            ex.execute_block(blk)
+        self._fin[k] = (head, len(cut), ex)
+        return ex.contract
 
     def verify(self) -> bool:
         return self.replica.verify()

@@ -188,6 +188,9 @@ class ChainReplica:
         self._orphans: Dict[str, List[Block]] = {}   # parent hash -> blocks
         self._sealed_at: Dict[Tuple[str, int], str] = {}
         self._at_height: Dict[int, int] = {}     # blocks held per height
+        # conflicting (first, second) block pairs observed for the same
+        # (sealer, height): drained by sync.py into tx_report_equivocation
+        self._equivocation_proofs: List[Tuple[Block, Block]] = []
         self._seq = 0
 
     # -- chain reads --------------------------------------------------------- #
@@ -320,6 +323,17 @@ class ChainReplica:
             self._sealed_at[key] = blk.hash
         elif other != blk.hash:
             self.stats["equivocations_seen"] += 1
+            # both sealed headers ARE the slashing proof — but only when
+            # they extend the SAME parent: re-sealing the same height on a
+            # different branch after a reorg is honest fork behaviour, not
+            # equivocation (sync.py drains the queue after each delivery)
+            if self.blocks[other].prev_hash == blk.prev_hash:
+                self._equivocation_proofs.append((self.blocks[other], blk))
+
+    def drain_equivocation_proofs(self) -> List[Tuple[Block, Block]]:
+        """Conflicting block pairs observed since the last drain."""
+        out, self._equivocation_proofs = self._equivocation_proofs, []
+        return out
 
     def _connect(self, blk: Block) -> List[str]:
         """Insert ``blk`` plus any orphans waiting on it (BFS down the tree);

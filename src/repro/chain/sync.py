@@ -223,12 +223,42 @@ class ChainNetwork:
         self._post_import(dst)
 
     def _post_import(self, dst: str) -> None:
-        """Resurrected txs (reorg) re-seal on the new head and propagate."""
+        """Resurrected txs (reorg) re-seal on the new head and propagate;
+        freshly observed equivocation proofs go on-chain as slashing txs."""
         rep = self.replicas[dst]
         if rep.mempool and rep.can_seal:
             blk = rep.seal(self._now())
             if blk is not None:
                 self.broadcast(dst, blk)
+        self._report_equivocations(dst)
+
+    def _report_equivocations(self, dst: str) -> None:
+        """Any replica that imported two conflicting headers for the same
+        (sealer, height) auto-submits ``tx_report_equivocation`` carrying
+        both headers — the contract verifies the proof and slashes the
+        sealer's reputation once per (sealer, height); replicas racing to
+        report the same twin are contract-level no-ops, not reverts. A
+        replica never reports *its own* equivocation (an actively byzantine
+        sealer would otherwise equivocate on the report block too — each
+        self-report spawning a fresh proof one height up, forever; honest
+        peers see both variants and report it anyway), and skips proofs its
+        contract already settled."""
+        rep = self.replicas[dst]
+        settled = getattr(rep.executor.contract, "equivocation_reports",
+                          {}) if rep.executor is not None else {}
+        for a, b in rep.drain_equivocation_proofs():
+            if a.sealer == dst or f"{a.sealer}@{a.height}" in settled:
+                continue
+            self.stats["equivocation_reports"] += 1
+            if self.env is not None:
+                self.env.emit(obsev.equivocation_report(dst, a.sealer,
+                                                        a.height))
+            try:
+                self.submit(rep, dst, "report_equivocation",
+                            {"header_a": a.to_json(),
+                             "header_b": b.to_json()}, self._now())
+            except PermissionError:
+                pass  # malformed pair on this replica's view: drop, no crash
 
     def _announce_head(self, dst: str, src: str) -> None:
         rep = self.replicas[dst]

@@ -226,7 +226,8 @@ SCORERS = ("accuracy", "multikrum", "loss")
 NET_PRESETS = ("lan", "wan-uniform", "wan-heterogeneous", "paper-testbed")
 
 FAULT_ACTIONS = ("down", "up", "isolate", "heal", "slow_link", "partition",
-                 "byzantine_sealer", "kill", "restart")
+                 "byzantine_sealer", "kill", "restart",
+                 "colluding_scorers", "byzantine_scorer", "heal_scorer")
 
 
 @dataclass(frozen=True)
@@ -246,7 +247,11 @@ class FaultScenario:
     ``kill`` (process crash: node down + the replica's entire in-memory
     state — chain, mempool, contract — dropped), ``restart`` (the killed
     node comes back, replays its WAL segment from disk, then closes any
-    remaining gap from peers).
+    remaining gap from peers), ``colluding_scorers`` (``node`` is a
+    comma-separated clique: each member inflates scores for clique-owned
+    models and stays honest elsewhere), ``byzantine_scorer`` (the named
+    silo inverts every score it submits), ``heal_scorer`` (clears the
+    named silo's scorer fault — reputation-recovery scenarios).
 
     Unknown actions fail here, at construction — not rounds into a run."""
     action: str                  # one of FAULT_ACTIONS
@@ -365,6 +370,14 @@ class FedConfig:
     # (int8 keyframe), so late joiners / post-reorg catch-up never walk more
     # than k-1 delta links (0 = every delta references the previous round)
     keyframe_every: int = 0
+    # -- trust layer (repro.core.contract reputation + consensus scores) -- #
+    # aggregation reads the canonical chain truncated this many blocks below
+    # head (reorg-proof reads); 0 = read the live head, as before
+    finality_depth: int = 0
+    # scorers commit H(score|salt) on-chain before revealing the score
+    commit_reveal: bool = False
+    # collapse per-model score lists weighted by on-chain reputation
+    reputation_weighted: bool = False
     # simulated store-network fabric; None = instantaneous in-memory store
     net: Optional[NetConfig] = None
     # observability (repro.obs); None = default ObsConfig (everything off)

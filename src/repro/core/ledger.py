@@ -114,6 +114,19 @@ class Ledger:
         """Deterministic 'on-chain randomness' from a block hash."""
         return self._replica.block_randomness(height)
 
+    def finalized_contract(self, k: int):
+        """API parity with ``chain.LedgerView``: the contract state ``k``
+        blocks below head. A solo chain never reorgs, so this is purely the
+        same lag semantics, re-executed into a muted shadow contract."""
+        if k <= 0 or self._executor is None:
+            return self.contract
+        live = self.contract
+        shadow = ContractExecutor(type(live)(live.mode), subscribers=[])
+        chain = self.blocks
+        for blk in chain[:max(0, len(chain) - k)]:
+            shadow.execute_block(blk)
+        return shadow.contract
+
     def verify(self) -> bool:
         return self._replica.verify()
 

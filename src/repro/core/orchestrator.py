@@ -24,6 +24,7 @@ retries after a short resync delay rather than crashing the engine.
 """
 from __future__ import annotations
 
+import hashlib
 import os
 import random
 import time
@@ -57,6 +58,7 @@ class SiloPolicy:
 ORCH_NODE = "orchestrator"   # the engine's own chain replica / tx sender
 CHAIN_RETRY_S = 0.25         # resubmit delay after a stale-replica revert
 CHAIN_RETRIES = 8            # bounded: 8 x 0.25s covers any preset's RTT
+COLLUDE_SCORE = 0.99         # the inflated score a colluding clique submits
 
 
 class SiloRuntime:
@@ -87,6 +89,12 @@ class SiloRuntime:
         self.last_global_cid: Optional[str] = None
         self.last_self_score = float("-inf")
         self.metrics: List[Dict] = []
+        # injected scorer fault (adversarial scenarios): None, or a
+        # ("collude", clique) / ("byzantine", _) pair set by the fault layer
+        self.scorer_fault: Optional[tuple] = None
+        # per-round aggregation picks ({round, owners}) — the adversarial
+        # chainbench gates compare these across attack/no-attack runs
+        self.pick_log: List[Dict] = []
         if fed.scorer not in SCORERS:
             raise ValueError(f"unknown scorer {fed.scorer!r} "
                              f"(choose from {SCORERS})")
@@ -155,6 +163,16 @@ class SiloRuntime:
             self._flat_spec = ops.make_flatten_spec(self.cluster.params)
         return self._flat_spec
 
+    def _read_contract(self) -> UnifyFLContract:
+        """The contract view aggregation reads: the live head (default) or,
+        with ``fed.finality_depth = k > 0``, the replica's canonical chain
+        truncated k blocks below head — reorg-proof by construction."""
+        k = self.fed.finality_depth
+        if k > 0 and self.ledger is not None \
+                and hasattr(self.ledger, "finalized_contract"):
+            return self.ledger.finalized_contract(k)
+        return self.contract
+
     def get_decoded(self, cid: str) -> wire.DecodedModel:
         """Pull a peer model via the store's decoded cache: fetched/decoded at
         most once per silo, int8 payloads kept packed for the fused kernels,
@@ -169,13 +187,26 @@ class SiloRuntime:
         the merged vector unflattens into ``cluster.params`` exactly once.
         Peer pulls may cross the WAN fabric: their transfer time accumulates
         in the store node and is folded into the next training duration;
-        unreachable peers (partition/churn) are skipped, not fatal."""
-        entries = self.contract.get_latest_models_with_scores(
+        unreachable peers (partition/churn) are skipped, not fatal.
+
+        With ``fed.finality_depth > 0`` the read comes from the k-deep
+        finalized view of this silo's replica — a partition-heal reorg can
+        rewrite the chain's tip, but never a score this merge consumed.
+        With ``fed.reputation_weighted`` the per-model score collapse is
+        weighted by on-chain reputation, so slashed scorers stop moving
+        the aggregate."""
+        src = self._read_contract()
+        entries = src.get_latest_models_with_scores(
             exclude_owner=self.silo_id)
+        reputation = dict(src.reputation) if self.fed.reputation_weighted \
+            else None
         picked = select_models(entries, agg_policy=self.policy.agg_policy,
                                score_policy=self.policy.score_policy,
                                k=self.policy.k,
-                               self_score=self.last_self_score, rng=self._rng)
+                               self_score=self.last_self_score, rng=self._rng,
+                               reputation=reputation)
+        self.pick_log.append({"round": self.rounds_done + 1,
+                              "owners": sorted(c.owner for c in picked)})
         if not picked:
             return 0
         peers = []
@@ -322,14 +353,46 @@ class SiloRuntime:
                 return
             tr.end(sp, self.env.now)
             for cid, score in zip(kept, scores):
+                val = self._score_value(cid, float(score))
                 # can revert against a stale replica (the model's block or a
                 # reassignment hasn't landed locally yet): bounded retries
-                self._submit("submit_score", cid=cid, score=float(score),
-                             _retries=CHAIN_RETRIES)
+                if self.fed.commit_reveal:
+                    # commit H(score|salt) first, reveal immediately after:
+                    # both land on this silo's replica in order, and the
+                    # contract verifies the reveal against the commitment
+                    salt = hashlib.sha256(
+                        f"{self.silo_id}|{cid}".encode()).hexdigest()[:16]
+                    self._submit(
+                        "commit_score", cid=cid,
+                        commit=UnifyFLContract.score_commitment(val, salt),
+                        _retries=CHAIN_RETRIES)
+                    self._submit("submit_score", cid=cid, score=val,
+                                 salt=salt, _retries=CHAIN_RETRIES)
+                else:
+                    self._submit("submit_score", cid=cid, score=val,
+                                 _retries=CHAIN_RETRIES)
             self._submit("set_busy", busy=False)
 
         self.env.schedule(duration, finish,
                           f"{self.silo_id}:score:{kept[0][:8]}x{len(kept)}")
+
+    def _score_value(self, cid: str, score: float) -> float:
+        """Apply an injected scorer fault: a colluding clique inflates
+        clique-owned models (and stays honest elsewhere — the hard case for
+        outlier detection), a byzantine scorer inverts every score. The
+        perturbed value is what gets committed AND revealed — adversaries
+        are internally consistent, so only settlement catches them."""
+        if self.scorer_fault is None:
+            return score
+        mode, clique = self.scorer_fault
+        if mode == "collude":
+            entry = self.contract.models.get(cid)
+            if entry is not None and entry.owner in clique:
+                return COLLUDE_SCORE
+            return score
+        if mode == "byzantine":
+            return min(1.0, max(0.0, 1.0 - score))
+        return score
 
     def score_async(self, cid: str, owner: str):
         """Single-CID assignment (Async engine / scorer reassignment): a
@@ -446,6 +509,7 @@ class BaseOrchestrator:
             self._fault_injector = FaultInjector(
                 self.fabric, net.scenarios, on_down=self._silo_net_down,
                 on_restart=self._silo_restart,
+                on_scorer_fault=self._set_scorer_fault,
                 nodes=[s.silo_id for s in self.silos] + [ORCH_NODE])
             self._fault_injector.schedule_timed()
 
@@ -466,6 +530,15 @@ class BaseOrchestrator:
                 if self._resume_loop is not None:
                     self.env.schedule(0.0, lambda s=s: self._resume_loop(s),
                                       f"{s.silo_id}:restart")
+
+    def _set_scorer_fault(self, node_id: str, mode: Optional[str],
+                          clique: Sequence[str]):
+        """Arm (or clear, mode=None) an adversarial scorer fault on a silo:
+        its subsequent score submissions are perturbed at the source."""
+        for s in self.silos:
+            if s.silo_id == node_id:
+                s.scorer_fault = None if mode is None \
+                    else (mode, frozenset(clique))
 
     def _net_phase(self, rnd: int, when: str):
         if self._fault_injector is not None:

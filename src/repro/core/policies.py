@@ -37,6 +37,41 @@ SCORE_POLICIES = {"median": score_median, "mean": score_mean,
                   "min": score_min, "max": score_max}
 
 
+def weighted_collapse(scores: Dict[str, float], policy: str,
+                      reputation: Dict[str, float],
+                      default_rep: float = 1.0) -> float:
+    """Reputation-weighted collapse of a per-model {scorer: score} map.
+
+    Zero-reputation (fully slashed) scorers are excluded outright; if no
+    trusted scorer remains the model collapses to ``-inf`` (unscored).
+    ``median`` is the weighted median (smallest value whose cumulative
+    weight reaches half the total — deterministic under ties), ``mean``
+    the weighted mean; ``min``/``max`` ignore weights beyond exclusion.
+    """
+    if not scores:
+        return float("-inf")
+    pairs = [(v, reputation.get(s, default_rep))
+             for s, v in sorted(scores.items())]
+    pairs = [(v, w) for v, w in pairs if w > 0.0]
+    if not pairs:
+        return float("-inf")
+    vals = np.array([v for v, _ in pairs], dtype=np.float64)
+    wts = np.array([w for _, w in pairs], dtype=np.float64)
+    if policy == "mean":
+        return float(np.sum(vals * wts) / np.sum(wts))
+    if policy == "median":
+        order = np.argsort(vals, kind="stable")
+        vals, wts = vals[order], wts[order]
+        cum = np.cumsum(wts)
+        idx = int(np.searchsorted(cum, cum[-1] / 2.0))
+        return float(vals[min(idx, len(vals) - 1)])
+    if policy == "min":
+        return float(np.min(vals))
+    if policy == "max":
+        return float(np.max(vals))
+    raise KeyError(policy)
+
+
 # ---------------------------------------------------------------------------- #
 # Aggregation policies
 # ---------------------------------------------------------------------------- #
@@ -68,7 +103,10 @@ def pick_random_k(cands: List[Candidate], self_score: float, *, k: int = 2,
 
 def pick_top_k(cands: List[Candidate], self_score: float, *, k: int = 2,
                rng=None) -> List[Candidate]:
-    return sorted(cands, key=lambda c: -c.score)[:k]
+    # CID tie-break pins the selection under equal scores: every silo (and
+    # every rerun) picks the same winners, keeping aggregation reorg- and
+    # replay-deterministic
+    return sorted(cands, key=lambda c: (-c.score, c.cid))[:k]
 
 
 def pick_above_average(cands: List[Candidate], self_score: float, *, k: int = 0,
@@ -105,12 +143,23 @@ AGG_POLICIES = {
 
 def select_models(entries: List[Dict], *, agg_policy: str, score_policy: str,
                   k: int = 2, self_score: float = float("-inf"),
-                  rng: Optional[random.Random] = None) -> List[Candidate]:
+                  rng: Optional[random.Random] = None,
+                  reputation: Optional[Dict[str, float]] = None
+                  ) -> List[Candidate]:
     """entries: contract.get_latest_models_with_scores() output.
-    Collapses score lists then applies the aggregation policy."""
-    sp = SCORE_POLICIES[score_policy]
-    cands = [Candidate(e["cid"], e["owner"], sp(list(e["scores"].values())))
-             for e in entries]
+    Collapses score lists then applies the aggregation policy. With
+    ``reputation`` (silo -> on-chain reputation) the collapse is
+    reputation-weighted: slashed scorers stop moving the aggregate."""
+    if reputation is not None:
+        cands = [Candidate(e["cid"], e["owner"],
+                           weighted_collapse(e["scores"], score_policy,
+                                             reputation))
+                 for e in entries]
+    else:
+        sp = SCORE_POLICIES[score_policy]
+        cands = [Candidate(e["cid"], e["owner"],
+                           sp(list(e["scores"].values())))
+                 for e in entries]
     # unscored models are only eligible under sampling-based policies
     if agg_policy in ("top_k", "above_average", "above_median", "above_self"):
         cands = [c for c in cands if c.score != float("-inf")]

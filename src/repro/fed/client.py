@@ -40,6 +40,19 @@ def make_train_step(model: Model, opt_name: str = "sgd", momentum: float = 0.0):
     return _STEP_CACHE[key]
 
 
+# the only byzantine client behaviours that exist; anything else (e.g. a
+# typo like 'sign_flip') would silently train honestly — fail fast instead,
+# mirroring config.FAULT_ACTIONS
+BYZANTINE_MODES = (None, "signflip", "noise")
+
+
+def validate_byzantine(mode: Optional[str], who: str) -> Optional[str]:
+    if mode not in BYZANTINE_MODES:
+        raise ValueError(f"{who}: unknown byzantine mode {mode!r} "
+                         f"(choose from {BYZANTINE_MODES})")
+    return mode
+
+
 class Client:
     """One FL client with a private shard of (x, y) or an LM stream."""
 
@@ -54,7 +67,7 @@ class Client:
         self.lr = lr
         self.optimizer = optimizer
         self.rng = np.random.default_rng(seed)
-        self.byzantine = byzantine  # None | 'signflip' | 'noise'
+        self.byzantine = validate_byzantine(byzantine, client_id)
 
     @property
     def n_samples(self) -> int:

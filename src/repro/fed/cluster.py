@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.fed import scorebatch
 from repro.fed.aggregator import SiloAggregator
-from repro.fed.client import Client
+from repro.fed.client import Client, validate_byzantine
 from repro.models.api import Model
 
 
@@ -31,7 +31,7 @@ class Cluster:
         self.test_data = test_data
         self.aggregator = SiloAggregator(silo_id, server_opt)
         self.local_epochs = local_epochs
-        self.byzantine = byzantine
+        self.byzantine = validate_byzantine(byzantine, silo_id)
         self.params = model.init(jax.random.PRNGKey(seed))
         self.round = 0
         self.history: List[Dict] = []

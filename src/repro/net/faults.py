@@ -15,7 +15,12 @@ transfers), ``isolate`` / ``heal`` (link partitions), ``slow_link``
 (process crash: the node goes down *and* its chain replica's entire
 in-memory state — block tree, mempool, contract — is wiped; only its WAL
 segment survives), ``restart`` (the node comes back, replays its WAL from
-disk at zero fabric cost, then resyncs the remaining gap from peers).
+disk at zero fabric cost, then resyncs the remaining gap from peers),
+``colluding_scorers`` (``node`` names a comma-separated clique whose
+members inflate scores for clique-owned models), ``byzantine_scorer``
+(the named silo inverts every score), ``heal_scorer`` (clears the named
+silo's scorer fault). Scorer faults reach the silo runtimes through the
+``on_scorer_fault(node, mode, clique)`` callback.
 
 When a replicated chain is attached (``FaultInjector.chain``), ``heal``,
 ``up`` and ``restart`` also trigger ``ChainNetwork.resync()`` — reconnection
@@ -39,9 +44,10 @@ from repro.obs import events as obsev
 ACTIONS = FAULT_ACTIONS
 
 # actions whose ``node`` field must name a known node (when a node set is
-# given); 'heal' takes no node, 'partition' is validated group-by-group
+# given); 'heal' takes no node, 'partition' and 'colluding_scorers' are
+# validated group-by-group
 _NODE_ACTIONS = ("down", "up", "isolate", "slow_link", "byzantine_sealer",
-                 "kill", "restart")
+                 "kill", "restart", "byzantine_scorer", "heal_scorer")
 
 
 def validate_scenarios(scenarios: Iterable[FaultScenario],
@@ -67,6 +73,8 @@ def validate_scenarios(scenarios: Iterable[FaultScenario],
         if sc.action == "partition":
             named.extend(n for g in (sc.node, sc.node_b)
                          for n in g.split(",") if n)
+        if sc.action == "colluding_scorers":
+            named.extend(n for n in sc.node.split(",") if n)
         bad = [n for n in named if n not in known]
         if bad:
             raise ValueError(
@@ -78,6 +86,7 @@ def apply_scenario(fabric: NetFabric, sc: FaultScenario, *,
                    on_down: Optional[Callable[[str], None]] = None,
                    on_up: Optional[Callable[[str], None]] = None,
                    on_restart: Optional[Callable[[str], None]] = None,
+                   on_scorer_fault: Optional[Callable] = None,
                    chain=None) -> None:
     if sc.action == "down":
         fabric.node_down(sc.node)
@@ -119,6 +128,20 @@ def apply_scenario(fabric: NetFabric, sc: FaultScenario, *,
             chain.restart(sc.node)
         if on_restart is not None:
             on_restart(sc.node)
+    elif sc.action == "colluding_scorers":
+        clique = tuple(n for n in sc.node.split(",") if n)
+        for member in clique:
+            fabric.env.emit(obsev.scorer_fault(member, "collude"))
+            if on_scorer_fault is not None:
+                on_scorer_fault(member, "collude", clique)
+    elif sc.action == "byzantine_scorer":
+        fabric.env.emit(obsev.scorer_fault(sc.node, "byzantine"))
+        if on_scorer_fault is not None:
+            on_scorer_fault(sc.node, "byzantine", (sc.node,))
+    elif sc.action == "heal_scorer":
+        fabric.env.emit(obsev.scorer_fault(sc.node, "healed"))
+        if on_scorer_fault is not None:
+            on_scorer_fault(sc.node, None, ())
     else:
         raise ValueError(f"unknown fault action {sc.action!r} "
                          f"(choose from {ACTIONS})")
@@ -132,6 +155,7 @@ class FaultInjector:
                  on_down: Optional[Callable[[str], None]] = None,
                  on_up: Optional[Callable[[str], None]] = None,
                  on_restart: Optional[Callable[[str], None]] = None,
+                 on_scorer_fault: Optional[Callable] = None,
                  chain=None,
                  nodes: Optional[Sequence[str]] = None):
         self.scenarios = tuple(scenarios)
@@ -140,6 +164,7 @@ class FaultInjector:
         self.on_down = on_down
         self.on_up = on_up
         self.on_restart = on_restart
+        self.on_scorer_fault = on_scorer_fault
         self.chain = chain        # bound late by the orchestrator's _wire
         self._round_fired: set = set()  # scenario indices already applied
 
@@ -167,4 +192,5 @@ class FaultInjector:
     def _apply(self, sc: FaultScenario) -> None:
         apply_scenario(self.fabric, sc, on_down=self.on_down,
                        on_up=self.on_up, on_restart=self.on_restart,
+                       on_scorer_fault=self.on_scorer_fault,
                        chain=self.chain)

@@ -136,3 +136,19 @@ def score_fetch_fail(node: str, cid: str) -> TraceEvent:
 def multikrum_fetch_fail(cid: str) -> TraceEvent:
     return TraceEvent("score.fetch-fail", f"multikrum:fetch-fail:{cid[:TX_W]}",
                       attrs={"cid": cid[:TX_W]})
+
+
+def scorer_fault(node: str, mode: str) -> TraceEvent:
+    """An injected scorer fault changed state: 'collude' / 'byzantine'
+    armed, or 'healed' (cleared)."""
+    return TraceEvent("trust.scorer-fault", f"trust:scorer-fault:{node}:{mode}",
+                      node=node, attrs={"mode": mode})
+
+
+def equivocation_report(reporter: str, sealer: str, height: int) -> TraceEvent:
+    """A replica observed two conflicting sealed headers and is submitting
+    the slashing proof on-chain."""
+    return TraceEvent("trust.equivocation-report",
+                      f"trust:equivocation:{sealer}@{height}:by:{reporter}",
+                      node=reporter,
+                      attrs={"sealer": sealer, "height": int(height)})

@@ -74,6 +74,7 @@ SCHEMAS: Dict[str, Dict[str, str]] = {
         "equivocations_sent": "counter", "kills": "counter",
         "restarts": "counter", "wal_replayed": "counter",
         "restart_fabric_bytes": "counter",
+        "equivocation_reports": "counter",
     },
     # chain.replica.ChainReplica (one per participant)
     "replica": {

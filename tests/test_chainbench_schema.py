@@ -2,7 +2,10 @@
 artifact keeps its schema and the acceptance invariants stay machine-checked
 (replicas converge with identical contract state in every scenario, WAN
 finality costs more than LAN, the sealer partition forks and heals, the
-equivocating sealer is detected)."""
+equivocating sealer is detected, and the adversarial trust scenarios hold:
+colluding scorers are flagged without moving honest picks, the equivocating
+sealer is slashed and governance-evicted, a healed scorer's reputation
+recovers)."""
 import json
 
 import pytest
@@ -28,7 +31,7 @@ def test_bench_chain_schema(bench):
     assert written == json.loads(json.dumps(result))  # artifact == return
     assert written["quick"] is True
     assert set(written) == {"quick", "config", "scenarios", "partition",
-                            "byzantine"}
+                            "byzantine", "trust"}
     expected = {"sync_lan", "sync_wan-heterogeneous", "async_lan",
                 "async_wan-heterogeneous"}
     assert set(written["scenarios"]) == expected
@@ -43,6 +46,20 @@ def test_bench_chain_schema(bench):
     assert ROW_KEYS <= set(written["partition"])
     assert "rounds_completed" in written["partition"]
     assert "equivocations_sent" in written["byzantine"]
+    trust = written["trust"]
+    assert set(trust) == {"colluding", "slashing", "recovery"}
+    assert {"clique", "honest_picks_equal", "honest_picks", "clique_rep",
+            "honest_rep_min", "outlier_flags", "colluders_flagged_outlier",
+            "heads_converged", "state_digests_equal"} \
+        <= set(trust["colluding"])
+    assert {"equivocations_sent", "equivocation_reports", "sealer_rep",
+            "slashed_below_threshold", "first_slash_round",
+            "slashed_within_rounds", "governance_evicted",
+            "heads_converged", "state_digests_equal"} \
+        <= set(trust["slashing"])
+    assert {"rep_trajectory", "rep_min", "rep_final", "dipped", "recovered",
+            "heads_converged", "state_digests_equal"} \
+        <= set(trust["recovery"])
 
 
 def test_bench_chain_acceptance(bench):
@@ -66,3 +83,20 @@ def test_bench_chain_acceptance(bench):
     # the equivocating sealer was caught by honest replicas
     assert written["byzantine"]["equivocations_sent"] >= 1
     assert written["byzantine"]["equivocations_seen"] >= 1
+    # adversarial trust scenarios: every run converges with identical state
+    trust = written["trust"]
+    for name, row in trust.items():
+        assert row["heads_converged"], name
+        assert row["state_digests_equal"], name
+    # a colluding clique (<= floor(n/3) scorers) is flagged by robust-z
+    # settlement and does not move the honest silos' aggregation picks
+    assert trust["colluding"]["honest_picks_equal"]
+    assert trust["colluding"]["colluders_flagged_outlier"]
+    # the equivocating sealer is slashed below the governance threshold
+    # within 3 rounds and voted off the sealer set
+    assert trust["slashing"]["slashed_below_threshold"]
+    assert trust["slashing"]["slashed_within_rounds"]
+    assert trust["slashing"]["governance_evicted"]
+    # a byzantine-then-healed scorer's reputation dips, then recovers
+    assert trust["recovery"]["dipped"]
+    assert trust["recovery"]["recovered"]

@@ -134,7 +134,7 @@ def test_out_of_order_score_buffers_until_assignment():
     led, c = _setup(n=4)
     led.submit("orchestrator", "start_training")
     ok = led.submit("s1", "submit_score", cid="m0", score=0.7)
-    assert ok is False and c.pending_scores == {"m0": {"s1": 0.7}}
+    assert ok is False and c.pending_scores == {"m0": {"s1": {"score": 0.7}}}
     led.submit("s0", "submit_model", cid="m0")
     led.submit("orchestrator", "start_scoring")
     entry = c.models["m0"]

@@ -79,6 +79,29 @@ def test_client_local_train_changes_params_and_counts():
     assert diff > 0
 
 
+def test_unknown_byzantine_mode_fails_fast():
+    """A typo'd byzantine mode (e.g. 'sign_flip') must raise at
+    construction, not silently train honestly."""
+    import pytest
+
+    from repro.fed.client import BYZANTINE_MODES
+    from repro.fed.cluster import Cluster
+
+    assert BYZANTINE_MODES == (None, "signflip", "noise")
+    cfg = get_config("paper-cnn")
+    model = build_model(cfg)
+    rng = np.random.default_rng(0)
+    data = {"x": rng.normal(0, 1, (8, 32, 32, 3)).astype(np.float32),
+            "y": rng.integers(0, 10, 8).astype(np.int32)}
+    with pytest.raises(ValueError, match="byzantine"):
+        Client("evil", model, data, byzantine="sign_flip", batch_size=8)
+    with pytest.raises(ValueError, match="byzantine"):
+        Cluster("silo0", model, [], test_data=data, byzantine="nois")
+    # the valid modes still construct
+    for mode in BYZANTINE_MODES:
+        Client("ok", model, data, byzantine=mode, batch_size=8)
+
+
 def test_byzantine_client_flips_sign():
     cfg = get_config("paper-cnn")
     model = build_model(cfg)

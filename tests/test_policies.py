@@ -4,7 +4,7 @@ import random
 import pytest
 
 from repro.core.policies import (AGG_POLICIES, SCORE_POLICIES, Candidate,
-                                 select_models)
+                                 select_models, weighted_collapse)
 
 
 def _cands(scores):
@@ -64,3 +64,73 @@ def test_select_models_collapses_scores_and_filters_unscored():
     assert [c.cid for c in picked] == ["a"]  # unscored b ineligible for top_k
     picked_all = select_models(entries, agg_policy="all", score_policy="median")
     assert {c.cid for c in picked_all} == {"a", "b"}  # sampling policies keep it
+
+
+# -- edge cases: empty, all -inf, tie-breaking ------------------------------- #
+
+def test_select_models_empty_candidates():
+    for agg in AGG_POLICIES:
+        for sp in SCORE_POLICIES:
+            assert select_models([], agg_policy=agg, score_policy=sp,
+                                 rng=random.Random(0)) == []
+
+
+def test_select_models_all_unscored_ranking_policies_pick_nothing():
+    entries = [{"cid": f"c{i}", "owner": f"o{i}", "scores": {}}
+               for i in range(3)]
+    for agg in ("top_k", "above_average", "above_median", "above_self"):
+        assert select_models(entries, agg_policy=agg,
+                             score_policy="median") == []
+
+
+def test_top_k_tie_break_is_deterministic_by_cid():
+    # equal scores: the CID orders the pick, regardless of input order
+    tied = [Candidate("zz", "o1", 0.5), Candidate("aa", "o2", 0.5),
+            Candidate("mm", "o3", 0.5)]
+    for perm in (tied, tied[::-1], [tied[1], tied[2], tied[0]]):
+        picked = AGG_POLICIES["top_k"](list(perm), 0.0, k=2)
+        assert [c.cid for c in picked] == ["aa", "mm"]
+
+
+def test_top_k_score_still_dominates_tie_break():
+    cands = [Candidate("aa", "o1", 0.1), Candidate("zz", "o2", 0.9)]
+    picked = AGG_POLICIES["top_k"](cands, 0.0, k=1)
+    assert [c.cid for c in picked] == ["zz"]
+
+
+# -- reputation-weighted collapse ------------------------------------------- #
+
+def test_weighted_collapse_downweights_slashed_scorer():
+    scores = {"good1": 0.30, "good2": 0.32, "evil": 0.99}
+    rep = {"good1": 1.0, "good2": 1.0, "evil": 0.0}
+    # slashed-to-zero scorer is excluded outright
+    assert weighted_collapse(scores, "max", rep) == 0.32
+    assert weighted_collapse(scores, "median", rep) == 0.30
+    # unweighted mean would be pulled to ~0.54; weighted stays honest
+    assert abs(weighted_collapse(scores, "mean", rep) - 0.31) < 1e-12
+
+
+def test_weighted_collapse_empty_and_untrusted():
+    assert weighted_collapse({}, "median", {}) == float("-inf")
+    assert weighted_collapse({"a": 0.5}, "median", {"a": 0.0}) == float("-inf")
+
+
+def test_weighted_median_reduces_to_plain_under_equal_weights():
+    scores = {f"s{i}": v for i, v in enumerate([0.1, 0.4, 0.9])}
+    assert weighted_collapse(scores, "median", {}) == 0.4
+
+
+def test_select_models_with_reputation():
+    entries = [
+        {"cid": "a", "owner": "oa",
+         "scores": {"h1": 0.2, "h2": 0.25, "evil": 0.99}},
+        {"cid": "b", "owner": "ob", "scores": {"h1": 0.6, "h2": 0.62}},
+    ]
+    rep = {"h1": 1.0, "h2": 1.0, "evil": 0.0}
+    picked = select_models(entries, agg_policy="top_k", score_policy="max",
+                           k=1, reputation=rep)
+    assert [c.cid for c in picked] == ["b"]
+    # without reputation the inflated score wins
+    picked = select_models(entries, agg_policy="top_k", score_policy="max",
+                           k=1)
+    assert [c.cid for c in picked] == ["a"]
