@@ -4,7 +4,7 @@ PYTHON ?= python
 PYTEST_ARGS ?=
 
 .PHONY: verify netbench scalebench kernelbench scorebench chainbench \
-	trustbench recoverybench trace
+	trustbench recoverybench edgebench trace
 
 verify:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q $(PYTEST_ARGS)
@@ -34,6 +34,13 @@ trustbench:
 
 recoverybench:
 	PYTHONPATH=src $(PYTHON) -m benchmarks.recoverybench --quick
+
+# Hierarchical edge tier: the 10/100/1000 clients-per-silo fleet sweep
+# (merged into BENCH_net.json as "edge") and the 3-tier light-client run
+# (merged into BENCH_chain.json as "light", acceptance: light sync <= 10%
+# of full block-replay bytes)
+edgebench:
+	PYTHONPATH=src $(PYTHON) -m benchmarks.edgebench --quick
 
 # Obs-enabled traced run: exports trace.json (Chrome trace-event JSON —
 # load it at https://ui.perfetto.dev), validates it, prints the run report.

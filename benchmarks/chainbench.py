@@ -36,6 +36,7 @@ from benchmarks.common import (CNN, bench_cli, emit, emit_acceptance, timed,
                                write_artifact)
 from repro.config import FaultScenario, FedConfig, NetConfig, ObsConfig
 from repro.core.builder import SiloSpec, build_image_experiment
+from repro.core.policies import select_models
 
 TRAIN_WINDOW_S = 1.0    # base simulated local-training window per silo
 STAGGER_S = 0.05        # per-silo window increment (heterogeneous fleets)
@@ -183,7 +184,13 @@ def run_colluding(quick: bool) -> Dict:
     reputation-weighted collapse changes honest models' collapsed values
     between the two runs (different weights select different order
     statistics), which would compare defense strength against comparison
-    noise instead of the attack."""
+    noise instead of the attack. For the same reason the gate compares
+    picks recomputed on the *converged post-run* contract (every replica's
+    state digest is identical — asserted below), not the mid-flight pick
+    log: the attack changes tx content, hence block hashes and sizes,
+    hence fork tie-breaks and propagation timing, so the two runs' live
+    score *visibility* at pick time differs in ways unrelated to the
+    scoring defense under test."""
     silos = 6
     rounds = 2 if quick else 3
     clique = ("silo4", "silo5")
@@ -218,7 +225,20 @@ def run_colluding(quick: bool) -> Dict:
     control = _one(attack=False)
     attacked = _one(attack=True)
     honest = [s.silo_id for s in control.silos if s.silo_id not in clique]
-    picks = {
+
+    def settled_picks(orch):
+        # each honest silo's top-k picks over the full, converged score set
+        # (unweighted median collapse — see docstring)
+        return {s.silo_id: sorted(
+                    c.owner for c in select_models(
+                        s.contract.get_latest_models_with_scores(
+                            exclude_owner=s.silo_id),
+                        agg_policy="top_k", score_policy="median", k=2))
+                for s in orch.silos if s.silo_id in honest}
+
+    picks = {"control": settled_picks(control),
+             "attack": settled_picks(attacked)}
+    live_picks = {
         run_name: {s.silo_id: [p["owners"] for p in s.pick_log]
                    for s in orch.silos if s.silo_id in honest}
         for run_name, orch in (("control", control), ("attack", attacked))}
@@ -230,6 +250,7 @@ def run_colluding(quick: bool) -> Dict:
         "clique": list(clique),
         "honest_picks_equal": picks["control"] == picks["attack"],
         "honest_picks": picks["attack"],
+        "live_picks_equal": live_picks["control"] == live_picks["attack"],
         "clique_rep": {n: rep.get(n, 0.0) for n in clique},
         "honest_rep_min": min(rep.get(n, 0.0) for n in honest),
         "outlier_flags": outlier_flags,

@@ -1,0 +1,179 @@
+"""Hierarchical edge federation benchmark: fleets + light-client sync.
+
+Two measurements, two artifacts:
+
+  * **edge sweep** (``BENCH_net.json``, section ``"edge"``): synthetic
+    fleet rounds at 10 / 100 / 1000 edge clients per silo (3 silos) on the
+    fair-share fabric — no ML, just ``EdgeFleet.traffic_round``'s sampling
+    + charged down/up transfers + device-profile delays. Shows where the
+    silo's *access port* becomes the bottleneck as the fleet fans in.
+  * **light vs full** (``BENCH_chain.json``, section ``"light"``): a real
+    3-tier run (3 silos x 200 edge clients, Sync engine, chain-backed
+    ledger) where every silo's sampled edge clients follow the chain as
+    header-only light clients and verify the silo's ``submit_model`` via
+    Merkle inclusion proofs. Acceptance: total light-sync bytes are <= 10%
+    of what full block replay would cost the same client population.
+
+Both sections *merge* into existing artifacts (netbench / chainbench own
+the rest of the file) or start a fresh skeleton. ``time_scale=0`` plus
+seeded device jitter keeps every number bit-reproducible.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.common import (CNN, bench_cli, emit, emit_acceptance, timed,
+                               write_artifact)
+from repro.config import FedConfig, NetConfig, ObsConfig
+from repro.core.builder import build_image_experiment
+from repro.core.simenv import SimEnv
+from repro.edge.fleet import EdgeFleet
+from repro.net import NetFabric, Topology
+
+SILOS = 3
+SWEEP = (10, 100, 1000)
+MODEL_NBYTES = 250_000       # ~paper-cnn f32 wire size, fixed for the sweep
+PARTICIPATION = 0.1
+SWEEP_ROUNDS = 3
+
+
+class _StubClient:
+    """Traffic-only stand-in: ``traffic_round`` needs ids, not gradients."""
+
+    __slots__ = ("client_id", "n_samples", "batch_size")
+
+    def __init__(self, client_id: str):
+        self.client_id = client_id
+        self.n_samples = 0
+        self.batch_size = 1
+
+
+def _sweep_row(n_edge: int, rounds: int) -> Dict:
+    """One fleet size: 3 silos' fleets share a fair-share fabric."""
+    env = SimEnv()
+    topo = Topology("wan-heterogeneous", seed=0)
+    fabric = NetFabric(env, topo, seed=0, bandwidth_model="fair-share")
+    fleets: List[EdgeFleet] = []
+    for i in range(SILOS):
+        sid = f"silo{i}"
+        fabric.register_node(sid)
+        fleet = EdgeFleet(sid, [_StubClient(f"{sid}/edge{j}")
+                                for j in range(n_edge)],
+                          participation=PARTICIPATION, seed=0)
+        fleet.attach(fabric, env)
+        fleets.append(fleet)
+    round_s = []
+    for r in range(rounds):
+        slowest = [f.traffic_round(r, MODEL_NBYTES)[0] for f in fleets]
+        round_s.append(max(slowest))
+    participants = sum(f.stats["participants"] for f in fleets)
+    edge_bytes = int(fabric.stats["edge_bytes"])
+    row = {
+        "edge_per_silo": n_edge,
+        "rounds": rounds,
+        "participants": int(participants),
+        "round_s_mean": sum(round_s) / len(round_s),
+        "round_s_max": max(round_s),
+        "edge_bytes": edge_bytes,
+        "bytes_per_participant": edge_bytes / max(1, participants),
+    }
+    emit(f"edge_sweep_{n_edge}", f"{row['round_s_mean']:.3f}",
+         f"participants={participants} edge_bytes={edge_bytes}")
+    return row
+
+
+def run_sweep(quick: bool) -> Dict:
+    rounds = 2 if quick else SWEEP_ROUNDS
+    return {
+        "config": {"silos": SILOS, "participation": PARTICIPATION,
+                   "model_nbytes": MODEL_NBYTES, "preset":
+                   "wan-heterogeneous", "bandwidth_model": "fair-share"},
+        "rows": [_sweep_row(n, rounds) for n in SWEEP],
+    }
+
+
+def run_light(quick: bool, trace_path: str = "") -> Dict:
+    """The 3-tier acceptance run: Sync engine, chain-backed ledger, every
+    silo backed by a 200-device fleet whose sampled clients light-verify
+    the silo's submissions."""
+    edge = 200              # >= 200 devices/silo — the 3-tier acceptance bar
+    rounds = 2
+    cfg = FedConfig(
+        n_silos=SILOS, clients_per_silo=1, rounds=rounds, local_epochs=1,
+        mode="sync", scorer="accuracy", agg_policy="all",
+        score_policy="median",
+        edge_per_silo=edge, edge_participation=PARTICIPATION,
+        edge_epochs=1, edge_light_clients=True,
+        net=NetConfig(preset="wan-heterogeneous"),
+        obs=ObsConfig(enabled=True) if trace_path else None)
+    orch = build_image_experiment(CNN, cfg, n_train=600 if quick else 1200,
+                                  n_test=150, batch_size=4, seed=0)
+    for s in orch.silos:
+        s.time_scale = 0.0
+    orch.run(rounds)
+    orch.env.run()          # drain in-flight proof round-trips
+    if trace_path:
+        orch.export_trace(trace_path)
+    hub = orch.light_sync
+    vs = hub.light_vs_full()
+    row = {
+        "silos": SILOS, "edge_per_silo": edge, "rounds": rounds,
+        "participation": PARTICIPATION,
+        "clients": len(hub.clients),
+        "announcements": int(hub.stats["announcements"]),
+        "headers_accepted": int(hub.stats["headers_accepted"]),
+        "headers_rejected": int(hub.stats["headers_rejected"]),
+        "proofs_verified": int(hub.stats["proofs_verified"]),
+        "proofs_failed": int(hub.stats["proofs_failed"]),
+        "edge_trained": sum(m.get("edge_trained", 0)
+                            for s in orch.silos for m in s.metrics),
+        **vs,
+    }
+    emit("edge_light_ratio", f"{vs['ratio']:.4f}",
+         f"light={vs['light_bytes']}B full_replay={vs['full_replay_bytes']}B "
+         f"proofs_verified={row['proofs_verified']}")
+    return row
+
+
+def _merge_section(out_path: str, section: str, value: Dict,
+                   quick: bool) -> Dict:
+    """Merge one section into an existing artifact (or a fresh skeleton) —
+    netbench/chainbench own the rest of their files."""
+    out = {"quick": quick}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            out = json.load(f)
+    out[section] = value
+    write_artifact(out, out_path)
+    return out
+
+
+def main(quick: bool = True, out_path: str = "BENCH_net.json",
+         trace_path: str = "", chain_out: str = "BENCH_chain.json") -> Dict:
+    with timed("edgebench"):
+        sweep = run_sweep(quick)
+        light = run_light(quick, trace_path)
+    _merge_section(out_path, "edge", sweep, quick)
+    _merge_section(chain_out, "light", light, quick)
+    ok = (light["ratio"] <= 0.10
+          and light["proofs_verified"] > 0
+          and light["headers_rejected"] == 0
+          and all(r["participants"] > 0 for r in sweep["rows"]))
+    emit_acceptance(
+        "edge", ok,
+        "3-tier run: light-client sync <= 10% of full block-replay bytes, "
+        "inclusion proofs verified, fleet sweep completes at 10/100/1000 "
+        "edge clients per silo")
+    return {"edge": sweep, "light": light}
+
+
+def _extra(ap) -> None:
+    ap.add_argument("--chain-out", dest="chain_out",
+                    default="BENCH_chain.json",
+                    help="artifact receiving the 'light' section")
+
+
+if __name__ == "__main__":
+    bench_cli(main, doc=__doc__, default_out="BENCH_net.json", extra=_extra)

@@ -9,8 +9,8 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks import (fig7_byzantine, kernelbench, netbench, roofline,
-                        table1_collab, table5_runs, table6_edge,
+from benchmarks import (edgebench, fig7_byzantine, kernelbench, netbench,
+                        roofline, table1_collab, table5_runs, table6_edge,
                         table7_overhead)
 
 BENCHES = {
@@ -21,6 +21,7 @@ BENCHES = {
     "fig7": fig7_byzantine.main,      # byzantine policies (Figure 7)
     "kernels": kernelbench.main,      # paper hot-spot kernels
     "net": netbench.main,             # store-network WAN fabric scenarios
+    "edge": edgebench.main,           # hierarchical fleets + light clients
     "roofline": roofline.main,        # dry-run roofline table (§Roofline)
 }
 

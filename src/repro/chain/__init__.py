@@ -16,20 +16,30 @@ sync       -- block broadcast + locator catch-up + heal/restart resync on
               the fabric; kill/restart replica lifecycle
 adapter    -- re-executable contract execution; LedgerView (the Ledger API
               bound to one replica: submit-via-local, read-your-replica)
+merkle     -- deterministic Merkle tx trees (header ``txroot``), inclusion
+              proofs + verification
+light      -- header-only light clients for edge nodes: debounced head
+              announcements, per-tx inclusion proofs served by the silo's
+              full replica, ctl-lane byte accounting
 """
 from repro.chain.adapter import ContractExecutor, LedgerView
 from repro.chain.forkchoice import better, common_ancestor, total_difficulty
 from repro.chain.sealer import (DIFF_IN_TURN, DIFF_OUT_OF_TURN, difficulty,
                                 equivocating_twin, in_turn_sealer,
                                 validate_seal)
-from repro.chain.replica import (GENESIS, WAL_FORMAT_VERSION, Block,
-                                 ChainReplica, ReplicaSnapshot, Tx,
+from repro.chain.replica import (GENESIS, HEADER_WIRE_NBYTES,
+                                 WAL_FORMAT_VERSION, Block, ChainReplica,
+                                 ReplicaSnapshot, Tx, header_hash,
                                  load_snapshot)
 from repro.chain.sync import ChainNetwork
+from repro.chain.light import (LightClient, LightSync, build_inclusion_proof,
+                               find_latest_txid, full_replay_nbytes)
 
 __all__ = ["ChainNetwork", "ChainReplica", "LedgerView", "ContractExecutor",
            "Block", "Tx", "GENESIS", "ReplicaSnapshot", "load_snapshot",
-           "WAL_FORMAT_VERSION", "better", "common_ancestor",
-           "total_difficulty", "difficulty", "in_turn_sealer",
-           "validate_seal", "equivocating_twin", "DIFF_IN_TURN",
-           "DIFF_OUT_OF_TURN"]
+           "WAL_FORMAT_VERSION", "HEADER_WIRE_NBYTES", "header_hash",
+           "LightClient", "LightSync", "build_inclusion_proof",
+           "find_latest_txid", "full_replay_nbytes", "better",
+           "common_ancestor", "total_difficulty", "difficulty",
+           "in_turn_sealer", "validate_seal", "equivocating_twin",
+           "DIFF_IN_TURN", "DIFF_OUT_OF_TURN"]

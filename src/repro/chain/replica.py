@@ -41,9 +41,11 @@ process was dead is fetched from peers (``sync.ChainNetwork.restart``).
 dataclass; ``restore_snapshot`` + ``replay_wal(skip=snap.wal_count)`` is
 byte-identical to a genesis replay of the whole segment.
 
-On-disk format: v2 (block hashes cover difficulty/salt/txid — a pre-chain
-v1 file fails the hash audit at its first record and rotates to
-``.corrupt`` wholesale).
+On-disk format: v3 (headers carry a deterministic Merkle transaction root
+— ``txroot`` — and the block hash commits to the tx list *through the
+root*, so a header alone is self-verifying and light clients can check
+per-tx inclusion proofs against it; a v1/v2 file fails the hash audit at
+its first record and rotates to ``.corrupt`` wholesale).
 """
 from __future__ import annotations
 
@@ -55,11 +57,16 @@ from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Set, Tuple
 
-from repro.chain import forkchoice, sealer as sealing
+from repro.chain import forkchoice, merkle, sealer as sealing
 from repro.chain.forkchoice import GENESIS
 from repro.obs.metrics import StatsView
 
-WAL_FORMAT_VERSION = 2   # block hashes cover difficulty/salt/txid
+WAL_FORMAT_VERSION = 3   # headers carry txroot; hash commits to txs via it
+
+# wire size of one binary header: height(8) + prev(32) + sealer(~20) +
+# time(8) + difficulty(1) + salt(8) + txroot(32) — what a light client pays
+# per header instead of ``Block.nbytes()`` for the full JSON block
+HEADER_WIRE_NBYTES = 112
 
 
 @dataclass
@@ -89,21 +96,30 @@ class Block:
     logical_time: float
     difficulty: int = sealing.DIFF_IN_TURN
     salt: int = 0            # equivocation variants differ only by salt
+    tx_root: str = ""        # Merkle root over txs (set by compute_hash)
     hash: str = ""
 
     def to_json(self) -> Dict:
         return {"height": self.height, "prev": self.prev_hash,
                 "sealer": self.sealer, "time": self.logical_time,
                 "difficulty": self.difficulty, "salt": self.salt,
-                "hash": self.hash, "txs": [t.to_json() for t in self.txs]}
+                "txroot": self.tx_root, "hash": self.hash,
+                "txs": [t.to_json() for t in self.txs]}
 
     def compute_hash(self) -> str:
-        body = json.dumps({
-            "height": self.height, "prev": self.prev_hash,
-            "sealer": self.sealer, "time": self.logical_time,
-            "difficulty": self.difficulty, "salt": self.salt,
-            "txs": [t.to_json() for t in self.txs]}, sort_keys=True)
-        return hashlib.sha256(body.encode()).hexdigest()
+        """Header hash. Commits to the tx list through the Merkle root
+        (derived here, never trusted from the wire), so a header alone
+        re-verifies without the tx bodies — see ``header_hash``."""
+        self.tx_root = merkle.tx_root([t.to_json() for t in self.txs])
+        return header_hash(self.header_json())
+
+    def header_json(self) -> Dict:
+        """The header: everything the hash covers, plus the hash itself —
+        what a light client stores and what head announcements carry."""
+        return {"height": self.height, "prev": self.prev_hash,
+                "sealer": self.sealer, "time": self.logical_time,
+                "difficulty": self.difficulty, "salt": self.salt,
+                "txroot": self.tx_root, "hash": self.hash}
 
     def nbytes(self) -> int:
         """Wire size of this block (charged on fabric links by sync.py)."""
@@ -118,7 +134,18 @@ class Block:
                for t in rec["txs"]]
         return cls(rec["height"], rec["prev"], rec["sealer"], txs,
                    rec["time"], rec.get("difficulty", 2),
-                   rec.get("salt", 0), rec["hash"])
+                   rec.get("salt", 0), rec.get("txroot", ""), rec["hash"])
+
+
+def header_hash(hdr: Dict) -> str:
+    """Hash of a header dict — header-only, no tx bodies. The light
+    client's self-verification: ``hdr["hash"] == header_hash(hdr)``."""
+    body = json.dumps({
+        "height": hdr["height"], "prev": hdr["prev"],
+        "sealer": hdr["sealer"], "time": hdr["time"],
+        "difficulty": hdr["difficulty"], "salt": hdr["salt"],
+        "txroot": hdr["txroot"]}, sort_keys=True)
+    return hashlib.sha256(body.encode()).hexdigest()
 
 
 @dataclass(frozen=True)

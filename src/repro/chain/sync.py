@@ -70,6 +70,9 @@ class ChainNetwork:
         self.tx_exec_t: Dict[str, Dict[str, float]] = {}
         self.stats = StatsView("chain_net")
         self._kill_t: Dict[str, float] = {}   # node -> sim time of last kill
+        # head-change listeners (light-client hub): fn(node_id, head_block)
+        self._head_listeners: List[Any] = []
+        self._last_head: Dict[str, str] = {}
         # sorted-membership memo: broadcast/resync iterate peers in sorted
         # order for determinism, and re-sorting per sealed block is
         # O(n log n) x blocks at thousand-replica scale
@@ -79,6 +82,25 @@ class ChainNetwork:
         if len(self._peer_order) != len(self.replicas):
             self._peer_order = tuple(sorted(self.replicas))
         return self._peer_order
+
+    # -- head announcements (light clients) ----------------------------------- #
+    def subscribe_heads(self, fn) -> None:
+        """``fn(node_id, head_block)`` fires whenever a replica's canonical
+        head *changes* (seal, import, catch-up, restart) — the light-client
+        hub's announcement source (``repro.chain.light``)."""
+        self._head_listeners.append(fn)
+
+    def _notify_head(self, node_id: str) -> None:
+        if not self._head_listeners:
+            return
+        rep = self.replicas.get(node_id)
+        if rep is None or rep.head == GENESIS \
+                or self._last_head.get(node_id) == rep.head:
+            return
+        self._last_head[node_id] = rep.head
+        blk = rep.blocks[rep.head]
+        for fn in self._head_listeners:
+            fn(node_id, blk)
 
     # -- membership ---------------------------------------------------------- #
     def add_replica(self, node_id: str, contract, *,
@@ -131,6 +153,7 @@ class ChainNetwork:
                 # the kill -> restart outage, on the node's chain track
                 tr.span_at("phase.recovery", f"{node_id}/chain",
                            t_kill, self._now(), wal_blocks=n)
+        self._notify_head(node_id)
         return n
 
     def _now(self) -> float:
@@ -169,6 +192,7 @@ class ChainNetwork:
             send = twin if (twin is not None and i % 2 == 1) else blk
             self._send_block(src, peer, send)
         self.stats["broadcasts"] += 1
+        self._notify_head(src)
 
     def _transfer(self, src: str, dst: str, label: str, nbytes: int,
                   on_land, key) -> None:
@@ -221,6 +245,7 @@ class ChainNetwork:
             # incoming branch lost: tell the sender about our heavier head
             self._announce_head(dst, src)
         self._post_import(dst)
+        self._notify_head(dst)
 
     def _post_import(self, dst: str) -> None:
         """Resurrected txs (reorg) re-seal on the new head and propagate;
@@ -350,6 +375,7 @@ class ChainNetwork:
         self._post_import(dst)
         # heads may still disagree (ours was heavier): tell the peer once
         self._announce_head(dst, src)
+        self._notify_head(dst)
 
     # -- reconciliation / introspection --------------------------------------- #
     def resync(self) -> None:

@@ -378,12 +378,50 @@ class FedConfig:
     commit_reveal: bool = False
     # collapse per-model score lists weighted by on-chain reputation
     reputation_weighted: bool = False
+    # -- hierarchical edge tier (repro.edge) ----------------------------- #
+    # > 0 puts an EdgeFleet of this many simulated edge clients behind every
+    # silo: they hold per-client Dirichlet shards of the silo's data, train
+    # locally and FedAvg up at the silo *before* the cross-silo round (the
+    # paper's multilevel mode as one config axis, not a separate loop)
+    edge_per_silo: int = 0
+    # fraction of the fleet sampled per round (partial participation)
+    edge_participation: float = 1.0
+    # local epochs per sampled edge client
+    edge_epochs: int = 1
+    # edge nodes follow the chain as light clients (header-only sync +
+    # per-tx inclusion proofs, repro.chain.light); requires a chain-backed
+    # ledger, i.e. ``net`` — the replicated chain only exists on a fabric
+    edge_light_clients: bool = False
     # simulated store-network fabric; None = instantaneous in-memory store
     net: Optional[NetConfig] = None
     # observability (repro.obs); None = default ObsConfig (everything off)
     obs: Optional[ObsConfig] = None
     # event-engine knobs (repro.core.simenv); None = default SimConfig
     sim: Optional[SimConfig] = None
+
+    def __post_init__(self):
+        # fail at construction, not rounds into a run (mirrors NetConfig /
+        # FaultScenario validation)
+        if self.edge_per_silo < 0:
+            raise ValueError(
+                f"edge_per_silo must be >= 0, got {self.edge_per_silo}")
+        if not 0.0 < self.edge_participation <= 1.0:
+            raise ValueError(
+                f"edge_participation must be in (0, 1], got "
+                f"{self.edge_participation}")
+        if self.edge_epochs < 1:
+            raise ValueError(
+                f"edge_epochs must be >= 1, got {self.edge_epochs}")
+        if self.edge_light_clients:
+            if self.edge_per_silo <= 0:
+                raise ValueError("edge_light_clients requires an edge tier "
+                                 "(edge_per_silo > 0)")
+            if self.net is None:
+                raise ValueError(
+                    "edge_light_clients requires a chain-backed ledger: "
+                    "set FedConfig.net — light clients verify inclusion "
+                    "proofs against replicated chain headers, which only "
+                    "exist on a fabric")
 
 
 @dataclass(frozen=True)

@@ -15,6 +15,7 @@ from repro.core.orchestrator import (AsyncOrchestrator, BaseOrchestrator,
                                      SiloPolicy, SyncOrchestrator)
 from repro.data.partition import dirichlet_partition, iid_partition
 from repro.data.synthetic import make_image_dataset, make_lm_dataset
+from repro.edge.fleet import EdgeFleet
 from repro.fed.client import Client
 from repro.fed.cluster import Cluster
 from repro.models import build_model
@@ -29,14 +30,40 @@ class SiloSpec:
     extra_score_delay: float = 0.0
 
 
+def _build_edge_tier(silo_id: str, model, x, y, fed: FedConfig, *,
+                     edge_alpha: float, batch_size: int, lr: float,
+                     seed: int):
+    """Shard one silo's training data across its edge fleet.
+
+    Each of ``fed.edge_per_silo`` edge clients holds a Dirichlet shard of
+    the silo's own shard (the fleet sees the silo's distribution, skewed
+    again within it) and trains on a device profile; the fleet FedAvgs up
+    at the silo before the cross-silo round."""
+    shards = dirichlet_partition(y, fed.edge_per_silo, edge_alpha,
+                                 seed=seed + 31, min_size=0)
+    clients = [Client(f"{silo_id}/edge{j}", model,
+                      {"x": x[p], "y": y[p]}, batch_size=batch_size, lr=lr,
+                      seed=seed * 1000 + j)
+               for j, p in enumerate(shards)]
+    fleet = EdgeFleet(silo_id, clients,
+                      participation=fed.edge_participation,
+                      epochs=fed.edge_epochs, seed=seed)
+    return clients, fleet
+
+
 def build_image_experiment(model_cfg: ModelConfig, fed: FedConfig, *,
                            partition: str = "niid", alpha: float = 0.5,
+                           edge_alpha: float = 1.0,
                            n_train: int = 3000, n_test: int = 600,
                            batch_size: int = 32, lr: float = 0.01,
                            silo_specs: Optional[Sequence[SiloSpec]] = None,
                            seed: int = 0):
     """The paper's CIFAR-like workload: one model config, n_silos clusters of
-    clients_per_silo clients each, IID or Dirichlet-NIID partitioned."""
+    clients_per_silo clients each, IID or Dirichlet-NIID partitioned.
+
+    With ``fed.edge_per_silo > 0`` each silo's shard is instead Dirichlet-split
+    (``edge_alpha``) across an :class:`~repro.edge.fleet.EdgeFleet` of that
+    many simulated edge devices — the hierarchical (multilevel) mode."""
     data = make_image_dataset(n_classes=model_cfg.vocab_size, n_train=n_train,
                               n_test=n_test, seed=seed)
     x, y = data["train"]
@@ -60,13 +87,21 @@ def build_image_experiment(model_cfg: ModelConfig, fed: FedConfig, *,
     model = build_model(model_cfg)
     for i in range(fed.n_silos):
         spec = specs[i]
-        clients = []
-        for j in range(fed.clients_per_silo):
-            p = parts[i * fed.clients_per_silo + j]
-            clients.append(Client(
-                f"silo{i}/client{j}", model,
-                {"x": x[p], "y": y[p]}, batch_size=batch_size, lr=lr,
-                seed=seed * 100 + i * 10 + j))
+        sp = silo_parts[i]
+        fleet = None
+        if fed.edge_per_silo > 0:
+            clients, fleet = _build_edge_tier(
+                f"silo{i}", model, x[sp], y[sp], fed,
+                edge_alpha=edge_alpha, batch_size=batch_size, lr=lr,
+                seed=seed * 100 + i)
+        else:
+            clients = []
+            for j in range(fed.clients_per_silo):
+                p = parts[i * fed.clients_per_silo + j]
+                clients.append(Client(
+                    f"silo{i}/client{j}", model,
+                    {"x": x[p], "y": y[p]}, batch_size=batch_size, lr=lr,
+                    seed=seed * 100 + i * 10 + j))
         tp = test_parts[i]
         # common init across silos (seed) — FedAvg across independently
         # initialized nets is destructive (permutation misalignment)
@@ -74,7 +109,8 @@ def build_image_experiment(model_cfg: ModelConfig, fed: FedConfig, *,
                           test_data={"x": xt[tp], "y": yt[tp]},
                           server_opt=spec.server_opt,
                           local_epochs=fed.local_epochs,
-                          byzantine=spec.byzantine, seed=seed)
+                          byzantine=spec.byzantine, seed=seed,
+                          edge_fleet=fleet)
         orch.add_silo(cluster, policy=spec.policy,
                       extra_train_delay=spec.extra_train_delay,
                       extra_score_delay=spec.extra_score_delay)

@@ -105,6 +105,9 @@ class SiloRuntime:
         self._rng = random.Random(cluster.silo_id)
         self._flat_spec = None  # cached flatten spec of this config's params
         self._announces = 0     # envelopes announced (keyframe cadence)
+        # bound by the orchestrator when fed.edge_light_clients: the hub
+        # through which this silo's edge fleet follows the chain
+        self.light_sync = None
 
     # ------------------------------------------------------------------ #
     @property
@@ -261,10 +264,20 @@ class SiloRuntime:
         t0 = time.perf_counter()
         m = self.cluster.train_round()
         compute = (time.perf_counter() - t0) * self.time_scale
+        fleet = self.cluster.edge_fleet
+        # hierarchical mode: the edge tier's simulated cost (slowest sampled
+        # device's down+train+up path) enters the clock alongside the
+        # silo-side compute; sampled clients are the awake set for head
+        # pushes until the next round's draw
+        edge_s = m.get("edge_sim_s", 0.0)
+        if fleet is not None and self.light_sync is not None:
+            self.light_sync.set_awake(
+                self.silo_id, [fleet.clients[j].client_id
+                               for j in fleet.last_participants])
         # WAN time spent pulling peer models for this round's merge enters
         # the simulated clock here (network charge is not time_scale'd)
         net_wait = self.store.drain_transfer_time()
-        duration = compute + self.extra_train_delay + net_wait
+        duration = compute + edge_s + self.extra_train_delay + net_wait
         tr = self.env.tracer
         t0_sim = self.env.now
         track = f"{self.silo_id}/phases"
@@ -273,8 +286,8 @@ class SiloRuntime:
             # stalls the head of this round's window
             tr.span_at("phase.fetch-stall", track, t0_sim, t0_sim + net_wait,
                        round=self.rounds_done + 1)
-        sp = tr.begin("phase.train", track, t0_sim,
-                      round=self.rounds_done + 1)
+        sp = tr.begin("phase.edge" if fleet is not None else "phase.train",
+                      track, t0_sim, round=self.rounds_done + 1)
 
         def finish():
             if not self.alive:
@@ -302,6 +315,18 @@ class SiloRuntime:
             # dead or partitioned silo's submission block never lands on
             # the engine's replica, so its heartbeat goes stale there.
             self._submit("submit_model", cid=cid, _retries=CHAIN_RETRIES)
+            if self.light_sync is not None:
+                # the round's sampled edge clients light-verify that their
+                # silo's submission landed: header + Merkle inclusion proof
+                # round-trips on the ctl lane, never full block replay
+                fleet = self.cluster.edge_fleet
+                lcs = None
+                if fleet is not None:
+                    lcs = [self.light_sync.clients[nid] for nid in
+                           (fleet.clients[j].client_id
+                            for j in fleet.last_participants)
+                           if nid in self.light_sync.clients]
+                self.light_sync.verify_submission(self.silo_id, clients=lcs)
             on_done(self, cid)
 
         self.env.schedule(duration, finish, f"{self.silo_id}:submit")
@@ -460,6 +485,7 @@ class BaseOrchestrator:
         self._ledger_path = ledger_path
         self.ledger = None        # Ledger (single-replica) or chain.LedgerView
         self.chain = None         # chain.ChainNetwork in replicated mode
+        self.light_sync = None    # chain.LightSync when fed.edge_light_clients
         self.fabric = None
         self.prefetcher = None
         self.gossip = None
@@ -583,6 +609,26 @@ class BaseOrchestrator:
             self.ledger.attach_contract(self.contract)
             for s in self.silos:
                 s.bind_ledger(self.ledger)
+        # hierarchical edge tier: fleets late-bind the fabric/engine so their
+        # per-round traffic is charged on the silos' access ports
+        fleets = [(s, s.cluster.edge_fleet) for s in self.silos
+                  if s.cluster.edge_fleet is not None]
+        for s, fleet in fleets:
+            fleet.attach(self.fabric, self.env)
+            self.obs.adopt(fleet.stats)
+        if self.fed.edge_light_clients and self.chain is not None:
+            from repro.chain import LightSync
+            self.light_sync = LightSync(self.env, self.fabric,
+                                        sealers=sealer_ids + [ORCH_NODE])
+            self.light_sync.wire(self.chain)
+            for s, fleet in fleets:
+                for nid in fleet.node_ids:
+                    self.light_sync.add_client(nid, s.silo_id)
+                # devices sleep until their first sampling: no head pushes
+                # to the 90%+ of the fleet that isn't participating yet
+                self.light_sync.set_awake(s.silo_id, [])
+                s.light_sync = self.light_sync
+            self.obs.adopt(self.light_sync.stats)
         for s in self.silos:
             s.register()
 

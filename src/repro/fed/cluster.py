@@ -24,7 +24,7 @@ class Cluster:
     def __init__(self, silo_id: str, model: Model, clients: List[Client], *,
                  test_data: Dict[str, np.ndarray], server_opt: str = "fedavg",
                  local_epochs: int = 2, byzantine: Optional[str] = None,
-                 seed: int = 0):
+                 seed: int = 0, edge_fleet=None):
         self.silo_id = silo_id
         self.model = model
         self.clients = clients
@@ -35,26 +35,46 @@ class Cluster:
         self.params = model.init(jax.random.PRNGKey(seed))
         self.round = 0
         self.history: List[Dict] = []
+        # hierarchical mode (repro.edge): when set, the silo's trainer
+        # population is an EdgeFleet — train_round delegates to it
+        self.edge_fleet = edge_fleet
 
     # ------------------------------------------------------------------ #
     def train_round(self) -> Dict:
         """One local FL round: fan out to clients, FedAvg their results.
-        Returns metrics; updates self.params (the silo 'local model')."""
+        Returns metrics; updates self.params (the silo 'local model').
+
+        With an ``edge_fleet`` attached this is the *edge tier* instead:
+        sampled edge clients train on their device profiles and FedAvg up
+        here — the multilevel pre-round the paper compares against, charged
+        on the fabric when one is wired."""
         t0 = time.perf_counter()
+        if self.edge_fleet is not None:
+            self.params, m = self.edge_fleet.train_round(self.params)
+            self._perturb()
+            self.round += 1
+            m["round"] = self.round
+            m["wall_s"] = time.perf_counter() - t0
+            return m
         results = [c.local_train(self.params, self.local_epochs)
                    for c in self.clients]
         self.params = self.aggregator.aggregate_clients(results)
+        self._perturb()
+        self.round += 1
+        wall = time.perf_counter() - t0
+        mean_loss = float(np.mean([r[2] for r in results]))
+        return {"round": self.round, "client_loss": mean_loss, "wall_s": wall}
+
+    def _perturb(self) -> None:
+        """Silo-level byzantine poisoning of the aggregated model."""
         if self.byzantine == "signflip":
             self.params = jax.tree.map(lambda p: -p, self.params)
         elif self.byzantine == "noise":
             rng = np.random.default_rng((self.round, 13))
             self.params = jax.tree.map(
-                lambda p: p + jnp.asarray(rng.normal(0, 0.5, p.shape), p.dtype),
+                lambda p: p + jnp.asarray(rng.normal(0, 0.5, p.shape),
+                                          p.dtype),
                 self.params)
-        self.round += 1
-        wall = time.perf_counter() - t0
-        mean_loss = float(np.mean([r[2] for r in results]))
-        return {"round": self.round, "client_loss": mean_loss, "wall_s": wall}
 
     # ------------------------------------------------------------------ #
     def evaluate(self, params=None) -> Dict[str, float]:

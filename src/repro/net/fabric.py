@@ -62,6 +62,8 @@ class UnreachableError(IOError):
 class TransferRecord:
     kind: str   # 'fetch' | 'replica' | 'reroute' | 'replicate' | 'prefetch'
     #             | 'chain' (consensus block gossip / catch-up)
+    #             | 'light' (header announcements + inclusion proofs)
+    #             | 'edge'  (edge<->silo model up/down within a fleet)
     src: str
     dst: str
     cid: str
@@ -297,12 +299,13 @@ class NetFabric:
         duration = ser + lat
         lk = _link_key(src, dst)
         fg, bg, ctl = (lk, "fg"), (lk, "bg"), (lk, "ctl")
-        if kind == "chain":
-            # control plane: consensus messages are tiny and pipeline —
-            # they serialize only among themselves, and only their
-            # *transmission* time occupies the lane (propagation latency is
-            # concurrent, not head-of-line blocking). A fork storm therefore
-            # never starves model transfers off the link.
+        if kind in ("chain", "light"):
+            # control plane: consensus messages (and light-client header /
+            # proof sync, which is consensus-read traffic) are tiny and
+            # pipeline — they serialize only among themselves, and only
+            # their *transmission* time occupies the lane (propagation
+            # latency is concurrent, not head-of-line blocking). A fork
+            # storm therefore never starves model transfers off the link.
             lane = "ctl"
             start = max(self.env.now, self._busy.get(ctl, 0.0))
             self._busy[ctl] = start + ser
@@ -324,7 +327,7 @@ class NetFabric:
         if tr.enabled:
             # span = lane *occupancy*; ctl spans end at start+ser so
             # pipelined consensus messages never overlap within the lane
-            occ_end = start + ser if kind == "chain" else end
+            occ_end = start + ser if kind in ("chain", "light") else end
             tr.span_at(f"net.{kind}", f"link/{lk[0]}~{lk[1]}/{lane}",
                        start, occ_end, src=src, dst=dst, cid=cid[:_CID_W],
                        nbytes=int(nbytes))
@@ -342,6 +345,10 @@ class NetFabric:
             # consensus traffic class: block gossip / catch-up (small,
             # latency-critical — pipelines in its own control lane above)
             self.stats["chain_bytes"] += int(nbytes)
+        elif kind == "light":
+            self.stats["light_bytes"] += int(nbytes)
+        elif kind == "edge":
+            self.stats["edge_bytes"] += int(nbytes)
         return end - self.env.now
 
     # -- fair-share flow path ----------------------------------------------- #
@@ -358,6 +365,10 @@ class NetFabric:
             self.stats["replica_serves"] += 1
         if kind == "chain":
             self.stats["chain_bytes"] += int(nbytes)
+        elif kind == "light":
+            self.stats["light_bytes"] += int(nbytes)
+        elif kind == "edge":
+            self.stats["edge_bytes"] += int(nbytes)
 
     def _transfer_fair(self, src: str, dst: str, cid: str, nbytes: int, *,
                        kind: str) -> float:

@@ -36,6 +36,7 @@ from repro.net.topology import MIB
 # transfer kind -> QoS class; unlisted kinds are demand traffic
 QOS_CLASS: Dict[str, str] = {
     "chain": "control",
+    "light": "control",     # header/proof sync rides the consensus class
     "prefetch": "scavenger",
     "replicate": "scavenger",
 }

@@ -152,3 +152,28 @@ def equivocation_report(reporter: str, sealer: str, height: int) -> TraceEvent:
                       f"trust:equivocation:{sealer}@{height}:by:{reporter}",
                       node=reporter,
                       attrs={"sealer": sealer, "height": int(height)})
+
+
+def edge_round(silo: str, rnd: int, participants: int,
+               nbytes: int) -> TraceEvent:
+    """One edge-fleet aggregation round at a silo: sampled participants
+    trained and FedAvg'd up before the cross-silo round."""
+    return TraceEvent("edge.round",
+                      f"edge:round:{silo}:r{rnd}:n={participants}",
+                      node=silo, attrs={"round": int(rnd),
+                                        "participants": int(participants),
+                                        "nbytes": int(nbytes)})
+
+
+def light_head(client: str, height: int) -> TraceEvent:
+    """A light client accepted an announced head header."""
+    return TraceEvent("light.head", f"light:head:{client}:h{height}",
+                      node=client, attrs={"height": int(height)})
+
+
+def light_verify(client: str, txid: str, ok: bool) -> TraceEvent:
+    """A light client checked a per-tx Merkle inclusion proof against its
+    header chain ('my silo's model landed on-chain')."""
+    return TraceEvent("light.verify",
+                      f"light:verify:{client}:{txid}:{'ok' if ok else 'FAIL'}",
+                      node=client, attrs={"txid": txid, "ok": bool(ok)})

@@ -51,6 +51,8 @@ SCHEMAS: Dict[str, Dict[str, str]] = {
         "queue_wait_s": "seconds", "busy_s": "seconds",
         "reroutes": "counter", "replica_serves": "counter",
         "cancelled": "counter", "chain_bytes": "counter",
+        "light_bytes": "counter",   # light-client chain sync (ctl lane)
+        "edge_bytes": "counter",    # edge<->silo fleet traffic (access ports)
         # fair-share bandwidth model (bandwidth_model='fair-share')
         "settles": "counter",       # vectorized rate recomputes
         "reschedules": "counter",   # land events moved by repricing
@@ -75,6 +77,23 @@ SCHEMAS: Dict[str, Dict[str, str]] = {
         "restarts": "counter", "wal_replayed": "counter",
         "restart_fabric_bytes": "counter",
         "equivocation_reports": "counter",
+    },
+    # chain.light.LightSync (hub for all header-only edge clients of a run)
+    "light": {
+        "announcements": "counter",      # head headers pushed to clients
+        "headers_accepted": "counter", "headers_rejected": "counter",
+        "proof_requests": "counter", "proofs_served": "counter",
+        "proofs_missing": "counter",
+        "proofs_verified": "counter", "proofs_failed": "counter",
+        "bytes": "counter",              # total light-sync wire bytes
+        "undeliverable": "counter",
+    },
+    # edge.fleet.EdgeFleet (one per silo)
+    "edge": {
+        "rounds": "counter", "participants": "counter",
+        "skipped_empty": "counter",      # sampled clients with no full batch
+        "bytes_down": "counter", "bytes_up": "counter",
+        "train_s": "seconds",            # summed simulated device time
     },
     # chain.replica.ChainReplica (one per participant)
     "replica": {

@@ -1,0 +1,190 @@
+"""repro.edge: fleets, device profiles, config fail-fast, hbfl parity.
+
+Covers the FedConfig edge-axis validation (bad participation / counts /
+light clients without a chain-backed ledger), deterministic sampling and
+device assignment, the traffic+delay model with and without a fabric, the
+Cluster -> EdgeFleet delegation, the builder's hierarchical assembly, and
+the unified hbfl/no-collab round loop's output shapes.
+"""
+import numpy as np
+import pytest
+
+from repro.config import FedConfig, NetConfig
+from repro.configs import get_config
+from repro.core.builder import build_image_experiment
+from repro.core.simenv import SimEnv
+from repro.edge import (DEVICE_PROFILES, EdgeFleet, assign_profile,
+                        fedavg_up, train_delay_s)
+from repro.fed.hbfl import run_hbfl, run_no_collab
+from repro.net import NetFabric, Topology
+
+CNN = get_config("paper-cnn")
+
+
+def _fed(**kw):
+    base = dict(n_silos=2, clients_per_silo=2, rounds=1, local_epochs=1,
+                mode="sync", scorer="accuracy", agg_policy="all",
+                score_policy="median")
+    base.update(kw)
+    return FedConfig(**base)
+
+
+class _Stub:
+    def __init__(self, cid, n=0, bs=1):
+        self.client_id, self.n_samples, self.batch_size = cid, n, bs
+
+
+# --------------------------------------------------------------------------- #
+# Config fail-fast
+# --------------------------------------------------------------------------- #
+
+def test_edge_config_validation_fails_fast():
+    with pytest.raises(ValueError, match="edge_per_silo"):
+        _fed(edge_per_silo=-1)
+    with pytest.raises(ValueError, match="edge_participation"):
+        _fed(edge_per_silo=4, edge_participation=0.0)
+    with pytest.raises(ValueError, match="edge_participation"):
+        _fed(edge_per_silo=4, edge_participation=1.5)
+    with pytest.raises(ValueError, match="edge_epochs"):
+        _fed(edge_per_silo=4, edge_epochs=0)
+    # light clients need an edge tier ...
+    with pytest.raises(ValueError, match="edge tier"):
+        _fed(edge_light_clients=True)
+    # ... and a chain-backed (replicated) ledger, i.e. a net fabric
+    with pytest.raises(ValueError, match="chain-backed"):
+        _fed(edge_per_silo=4, edge_light_clients=True)
+    # the valid combination constructs
+    cfg = _fed(edge_per_silo=4, edge_participation=0.5,
+               edge_light_clients=True,
+               net=NetConfig(preset="wan-heterogeneous"))
+    assert cfg.edge_per_silo == 4
+
+
+# --------------------------------------------------------------------------- #
+# Devices + sampling determinism
+# --------------------------------------------------------------------------- #
+
+def test_device_assignment_and_delays_are_deterministic():
+    profs = [assign_profile("silo0", j, seed=0) for j in range(200)]
+    assert profs == [assign_profile("silo0", j, seed=0) for j in range(200)]
+    names = {p.name for p in profs}
+    assert names == set(DEVICE_PROFILES)        # the mix shows up at n=200
+    import random
+    d1 = train_delay_s(profs[0], 2, random.Random(7))
+    d2 = train_delay_s(profs[0], 2, random.Random(7))
+    assert d1 == d2
+    assert d1 >= profs[0].base_s + 2 * profs[0].per_epoch_s
+
+
+def test_sampling_is_deterministic_and_partial():
+    fleet = EdgeFleet("silo0", [_Stub(f"e{j}") for j in range(50)],
+                      participation=0.2, seed=3)
+    s1, s2 = fleet.sample(4), fleet.sample(4)
+    assert s1 == s2 == sorted(s1)
+    assert len(s1) == 10
+    assert fleet.sample(5) != s1        # different round, different draw
+    with pytest.raises(ValueError):
+        EdgeFleet("silo0", [])
+
+
+def test_traffic_round_charges_fabric_and_takes_slowest_device():
+    env = SimEnv()
+    fabric = NetFabric(env, Topology("wan-heterogeneous", seed=0), seed=0)
+    fabric.register_node("silo0")
+    fleet = EdgeFleet("silo0", [_Stub(f"silo0/e{j}") for j in range(10)],
+                      participation=0.5, seed=0)
+    fleet.attach(fabric, env)
+    slowest, total, idxs = fleet.traffic_round(0, 1000)
+    assert len(idxs) == 5
+    assert total == 2 * 1000 * 5
+    assert fabric.stats["edge_bytes"] == total
+    assert fleet.stats["bytes_down"] == fleet.stats["bytes_up"] == 5000
+    # slowest >= the largest bare train delay of the sampled set
+    assert slowest > 0
+    # fabric-less fleets still account, transfers are free
+    free = EdgeFleet("silo0", [_Stub(f"silo0/e{j}") for j in range(10)],
+                     participation=0.5, seed=0)
+    s2, t2, i2 = free.traffic_round(0, 1000)
+    assert i2 == idxs and t2 == total
+    assert s2 <= slowest
+
+
+def test_fedavg_up_weights_by_samples_and_skips_empty():
+    p1, p2 = {"w": np.ones(3)}, {"w": np.full(3, 3.0)}
+    agg = fedavg_up([(p1, 1, 0.0), (p2, 3, 0.0)])
+    np.testing.assert_allclose(np.asarray(agg["w"]), 2.5)
+    assert fedavg_up([(p1, 0, 0.0)]) is None
+    assert fedavg_up([]) is None
+
+
+# --------------------------------------------------------------------------- #
+# 3-tier assembly + training
+# --------------------------------------------------------------------------- #
+
+def test_builder_assembles_edge_fleets_and_round_trains():
+    fed = _fed(edge_per_silo=8, edge_participation=0.5, rounds=1)
+    orch = build_image_experiment(CNN, fed, n_train=400, n_test=100,
+                                  batch_size=4, seed=0)
+    for s in orch.silos:
+        fleet = s.cluster.edge_fleet
+        assert fleet is not None
+        assert len(fleet.clients) == 8
+        assert [c.client_id for c in fleet.clients] == \
+            [f"{s.silo_id}/edge{j}" for j in range(8)]
+    m = orch.silos[0].cluster.train_round()
+    assert m["edge_participants"] == 4
+    assert m["edge_trained"] + m["edge_skipped"] <= 4
+    assert m["round"] == 1
+    assert orch.silos[0].cluster.edge_fleet.stats["rounds"] == 1
+
+
+def test_three_tier_sync_run_with_light_clients():
+    """The acceptance topology in miniature: Sync engine, chain-backed
+    ledger, every silo's sampled edge clients light-verify submissions."""
+    fed = _fed(n_silos=3, rounds=2, edge_per_silo=12,
+               edge_participation=0.25, edge_light_clients=True,
+               net=NetConfig(preset="wan-heterogeneous"))
+    orch = build_image_experiment(CNN, fed, n_train=400, n_test=100,
+                                  batch_size=4, seed=0)
+    for s in orch.silos:
+        s.time_scale = 0.0
+    orch.run(2)
+    orch.env.run()                      # drain in-flight proof round-trips
+    hub = orch.light_sync
+    assert hub is not None
+    assert len(hub.clients) == 36
+    assert hub.stats["proofs_verified"] > 0
+    assert hub.stats["proofs_failed"] == 0
+    assert hub.stats["headers_rejected"] == 0
+    vs = hub.light_vs_full()
+    assert 0 < vs["light_bytes"] < vs["full_replay_bytes"]
+    assert vs["ratio"] <= 0.10
+    # edge traffic was charged on the fabric, on its own meter
+    assert orch.fabric.stats["edge_bytes"] > 0
+    assert orch.fabric.stats["light_bytes"] > 0
+    for s in orch.silos:
+        assert s.rounds_done == 2
+        assert all("edge_participants" in m for m in s.metrics)
+
+
+# --------------------------------------------------------------------------- #
+# Unified baseline loop (hbfl / no-collab)
+# --------------------------------------------------------------------------- #
+
+def test_hbfl_and_no_collab_shapes_survive_unification():
+    fed = _fed(rounds=2)
+    orch = build_image_experiment(CNN, fed, n_train=300, n_test=100, seed=0)
+    clusters = [s.cluster for s in orch.silos]
+    hb = run_hbfl(clusters, 2)
+    assert set(hb) == {"history", "global_params"}
+    assert [h["round"] for h in hb["history"]] == [0, 1]
+    for h in hb["history"]:
+        assert set(h) == {"round", "global", "local"}
+        assert set(h["global"]) == {"silo0", "silo1"}
+        for ev in h["global"].values():
+            assert {"accuracy", "loss"} <= set(ev)
+    orch2 = build_image_experiment(CNN, fed, n_train=300, n_test=100, seed=0)
+    nc = run_no_collab([s.cluster for s in orch2.silos], 2)
+    assert set(nc) == {"history"}
+    for h in nc["history"]:
+        assert set(h) == {"round", "local"}

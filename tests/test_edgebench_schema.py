@@ -1,0 +1,66 @@
+"""edgebench artifact schema + acceptance invariants (tier-1).
+
+Runs ``benchmarks.edgebench.main(quick=True)`` against temp artifacts and
+asserts the merged sections: ``"edge"`` (the 10/100/1000 clients-per-silo
+fleet sweep) lands in the net artifact, ``"light"`` (light-vs-full bytes
+from the 3-tier run) in the chain artifact — and that merging preserves
+sections another benchmark already wrote.
+"""
+import json
+
+import pytest
+
+from benchmarks import edgebench
+
+
+@pytest.fixture(scope="module")
+def arts(tmp_path_factory):
+    d = tmp_path_factory.mktemp("edgebench")
+    net, chain = d / "BENCH_net.json", d / "BENCH_chain.json"
+    # pre-seed the net artifact: edgebench must merge, not clobber
+    net.write_text(json.dumps({"quick": True, "scale": {"sentinel": 1}}))
+    out = edgebench.main(quick=True, out_path=str(net),
+                         chain_out=str(chain))
+    return out, json.load(net.open()), json.load(chain.open())
+
+
+def test_edge_section_schema(arts):
+    _, net, _ = arts
+    assert net["scale"] == {"sentinel": 1}      # merge preserved netbench's
+    edge = net["edge"]
+    assert set(edge) == {"config", "rows"}
+    assert [r["edge_per_silo"] for r in edge["rows"]] == [10, 100, 1000]
+    for r in edge["rows"]:
+        assert set(r) == {"edge_per_silo", "rounds", "participants",
+                          "round_s_mean", "round_s_max", "edge_bytes",
+                          "bytes_per_participant"}
+        assert r["participants"] > 0
+        assert r["edge_bytes"] > 0
+        assert r["round_s_max"] >= r["round_s_mean"] > 0
+    # fan-in grows with fleet size
+    bs = [r["edge_bytes"] for r in edge["rows"]]
+    assert bs[0] < bs[1] < bs[2]
+
+
+def test_light_section_schema_and_acceptance(arts):
+    _, _, chain = arts
+    light = chain["light"]
+    assert set(light) == {"silos", "edge_per_silo", "rounds",
+                          "participation", "clients", "announcements",
+                          "headers_accepted", "headers_rejected",
+                          "proofs_verified", "proofs_failed", "edge_trained",
+                          "light_bytes", "full_replay_bytes", "ratio"}
+    assert light["silos"] >= 3 and light["edge_per_silo"] >= 200
+    assert light["clients"] == light["silos"] * light["edge_per_silo"]
+    assert light["proofs_verified"] > 0
+    assert light["proofs_failed"] == 0
+    assert light["headers_rejected"] == 0
+    # the tentpole acceptance: light sync <= 10% of full block replay
+    assert 0 < light["light_bytes"] < light["full_replay_bytes"]
+    assert light["ratio"] <= 0.10
+
+
+def test_main_returns_both_sections(arts):
+    out, net, chain = arts
+    assert out["edge"] == net["edge"]
+    assert out["light"] == chain["light"]

@@ -1,0 +1,217 @@
+"""Merkle tx commitments + header-only light clients (PR 10 tentpole).
+
+Covers the Merkle tree (empty / single-tx / odd-width blocks, tampered
+proofs, wrong roots, an every-index property sweep), the self-verifying v3
+header (hash commits to txs *through* the root), the light client's
+header/seal validation, the full proof round-trip against a live
+ChainNetwork, and the WAL v2 -> v3 format break (old records fail the hash
+audit and rotate to ``.corrupt`` wholesale).
+"""
+import json
+
+import pytest
+
+from repro.chain import (ChainNetwork, GENESIS, LightClient, LightSync, Tx,
+                         build_inclusion_proof, find_latest_txid,
+                         full_replay_nbytes, header_hash)
+from repro.chain import merkle
+from repro.chain.replica import Block, ChainReplica, WAL_FORMAT_VERSION
+from repro.core.contract import UnifyFLContract
+from repro.core.simenv import SimEnv
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    st = None
+
+
+def _txs(n, sender="a"):
+    return [Tx(sender, "m", {"i": i}, float(i), f"{sender}:{i}")
+            for i in range(n)]
+
+
+def _leaves(txs):
+    return [merkle.tx_leaf(t.to_json()) for t in txs]
+
+
+# --------------------------------------------------------------------------- #
+# Merkle units
+# --------------------------------------------------------------------------- #
+
+def test_empty_block_root_is_the_domain_separated_constant():
+    assert merkle.tx_root([]) == merkle.EMPTY_ROOT
+    blk = Block(0, GENESIS, "a", [], 0.0, 2)
+    blk.hash = blk.compute_hash()
+    assert blk.tx_root == merkle.EMPTY_ROOT
+
+
+def test_single_tx_block_root_is_the_leaf_and_proof_is_empty():
+    txs = _txs(1)
+    leaves = _leaves(txs)
+    assert merkle.tx_root([t.to_json() for t in txs]) == leaves[0]
+    proof = merkle.merkle_proof(leaves, 0)
+    assert proof == []
+    assert merkle.verify_proof(leaves[0], proof, leaves[0])
+
+
+def test_every_tx_of_every_width_verifies():
+    """Every index of blocks 1..9 wide (covers odd promotion) verifies
+    against the root; no proof verifies against another block's root."""
+    for n in range(1, 10):
+        txs = _txs(n)
+        leaves = _leaves(txs)
+        root = merkle.tx_root([t.to_json() for t in txs])
+        for i in range(n):
+            proof = merkle.merkle_proof(leaves, i)
+            assert merkle.verify_proof(leaves[i], proof, root), (n, i)
+            assert not merkle.verify_proof(leaves[i], proof,
+                                           merkle.EMPTY_ROOT)
+
+
+def test_tampered_proof_and_tampered_tx_fail():
+    txs = _txs(5)
+    leaves = _leaves(txs)
+    root = merkle.tx_root([t.to_json() for t in txs])
+    proof = merkle.merkle_proof(leaves, 2)
+    # tampered tx: leaf no longer under the root
+    bad_leaf = merkle.tx_leaf(Tx("a", "m", {"i": 99}, 2.0, "a:2").to_json())
+    assert not merkle.verify_proof(bad_leaf, proof, root)
+    # tampered sibling hash
+    d, sib = proof[0]
+    bad = [(d, "00" * 32)] + list(proof[1:])
+    assert not merkle.verify_proof(leaves[2], bad, root)
+    # flipped direction
+    flip = [("L" if d == "R" else "R", sib)] + list(proof[1:])
+    assert not merkle.verify_proof(leaves[2], flip, root)
+    # unknown direction byte is a hard False, not an exception
+    assert not merkle.verify_proof(leaves[2], [("X", sib)], root)
+    with pytest.raises(IndexError):
+        merkle.merkle_proof(leaves, 5)
+
+
+if st is not None:
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(min_value=1, max_value=24),
+           st.integers(min_value=0, max_value=2 ** 30))
+    def test_property_random_width_blocks_verify(n, seed):
+        txs = [Tx(f"s{seed % 7}", "m", {"v": seed ^ i}, float(i),
+                  f"s:{seed}:{i}") for i in range(n)]
+        leaves = _leaves(txs)
+        root = merkle.tx_root([t.to_json() for t in txs])
+        for i in range(n):
+            assert merkle.verify_proof(
+                leaves[i], merkle.merkle_proof(leaves, i), root)
+else:
+    def test_property_random_width_blocks_verify():
+        for seed in range(12):
+            n = 1 + (seed * 7 + 3) % 24
+            txs = [Tx(f"s{seed % 7}", "m", {"v": seed ^ i}, float(i),
+                      f"s:{seed}:{i}") for i in range(n)]
+            leaves = _leaves(txs)
+            root = merkle.tx_root([t.to_json() for t in txs])
+            for i in range(n):
+                assert merkle.verify_proof(
+                    leaves[i], merkle.merkle_proof(leaves, i), root)
+
+
+# --------------------------------------------------------------------------- #
+# Self-verifying headers + light client
+# --------------------------------------------------------------------------- #
+
+def test_header_hash_commits_to_txs_through_the_root():
+    blk = Block(0, GENESIS, "a", _txs(3), 0.0, 2)
+    blk.hash = blk.compute_hash()
+    hdr = blk.header_json()
+    assert header_hash(hdr) == blk.hash
+    # every tx in the sealed block proves against the header's root
+    leaves = _leaves(blk.txs)
+    for i in range(len(blk.txs)):
+        assert merkle.verify_proof(leaves[i],
+                                   merkle.merkle_proof(leaves, i),
+                                   hdr["txroot"])
+    # a different tx list is a different hash (via the root alone)
+    blk2 = Block(0, GENESIS, "a", _txs(4), 0.0, 2)
+    blk2.hash = blk2.compute_hash()
+    assert blk2.hash != blk.hash
+
+
+def test_light_client_accepts_valid_and_rejects_tampered_headers():
+    sealers = ["a", "b", "c"]
+    blk = Block(0, GENESIS, "a", _txs(2), 0.0, 2)
+    blk.hash = blk.compute_hash()
+    lc = LightClient("edge0", "a", sealers)
+    assert lc.accept_header(blk.header_json())
+    assert lc.height == 1
+    assert lc.accept_header(blk.header_json())      # idempotent
+    assert lc.stats["headers_accepted"] == 1
+    # tampered height: hash no longer recomputes
+    bad = dict(blk.header_json(), height=5)
+    assert not lc.accept_header(bad)
+    # unauthorized sealer with a self-consistent hash: seal check catches it
+    rogue = Block(0, GENESIS, "mallory", [], 0.0, 2)
+    rogue.hash = rogue.compute_hash()
+    assert not lc.accept_header(rogue.header_json())
+    # difficulty lying about the schedule (out-of-turn claiming in-turn)
+    lie = Block(0, GENESIS, "b", [], 0.0, 2)
+    lie.hash = lie.compute_hash()
+    assert not lc.accept_header(lie.header_json())
+    assert lc.stats["headers_rejected"] == 3
+
+
+def test_proof_roundtrip_on_a_live_chain():
+    """End-to-end without a fabric: seal real txs through ChainNetwork,
+    announce heads, light-verify a specific submission."""
+    env = SimEnv()
+    nodes = ["a", "b", "c"]
+    net = ChainNetwork(env, None, sealers=nodes)
+    views = {n: net.add_replica(n, UnifyFLContract("async")) for n in nodes}
+    hub = LightSync(None, None, sealers=nodes)
+    hub.wire(net)
+    lc = hub.add_client("a/edge0", "a")
+    for n in nodes:
+        views[n].submit(n, "register", logical_time=env.now)
+    env.run()
+    # headers arrived (sync push, no fabric) and self-verified
+    assert lc.height >= 1
+    assert hub.stats["headers_rejected"] == 0
+    txid = hub.verify_submission("a", method="register")
+    assert txid is not None
+    assert lc.verified[txid] is True
+    assert hub.stats["proofs_verified"] == 1
+    assert hub.stats["proofs_failed"] == 0
+    # the hub's byte meter ran even without a fabric
+    assert hub.stats["bytes"] > 0
+    assert full_replay_nbytes(net.replicas["a"]) > hub.stats["bytes"]
+
+
+def test_missing_tx_yields_no_proof():
+    rep = ChainReplica("a", ["a"])
+    assert find_latest_txid(rep, "a", "submit_model") is None
+    assert build_inclusion_proof(rep, "nope") is None
+
+
+# --------------------------------------------------------------------------- #
+# WAL format break: v2 records fail the v3 hash audit and rotate
+# --------------------------------------------------------------------------- #
+
+def test_wal_v2_records_rotate_to_corrupt(tmp_path):
+    assert WAL_FORMAT_VERSION == 3
+    seg = tmp_path / "a.jsonl"
+    blk = Block(0, GENESIS, "a", _txs(2), 0.0, 2)
+    blk.hash = blk.compute_hash()
+    rec = blk.to_json()
+    # a v2-era record: no txroot, hash computed under the old scheme —
+    # model it as a stored hash that doesn't recompute header-only
+    rec.pop("txroot")
+    rec["hash"] = "ab" * 32
+    seg.write_bytes((json.dumps(rec) + "\n").encode())
+    rep = ChainReplica("a", ["a"], segment_path=str(seg))
+    assert rep.replay_wal() == 0
+    assert rep.head == GENESIS
+    assert (tmp_path / "a.jsonl.corrupt").exists()
+    assert seg.read_bytes() == b""      # truncated to the (empty) prefix
+    # a freshly-written v3 segment replays cleanly on restart
+    rep.import_block(blk)
+    rep2 = ChainReplica("a2", ["a"], segment_path=str(seg))
+    assert rep2.replay_wal() == 1
+    assert rep2.head == blk.hash
